@@ -1,0 +1,29 @@
+"""§2.2: communication rounds T vs grad budget K — the T ~ sqrt(K) claim."""
+from __future__ import annotations
+
+import math
+import time
+
+from repro.configs.base import SampleSequenceConfig
+from repro.core import rounds_for_budget
+
+
+def run():
+    rows = []
+    for kind, cfg in [
+        ("linear", SampleSequenceConfig(kind="linear", s0=16, a=1.0)),
+        ("ilog", SampleSequenceConfig(kind="ilog", s0=16, m=2900, d=1)),
+        ("constant", SampleSequenceConfig(kind="constant", s0=16)),
+    ]:
+        t0 = time.time()
+        ts = []
+        for K in (10_000, 40_000, 160_000):
+            ts.append(len(rounds_for_budget(cfg, K)))
+        dt = time.time() - t0
+        # scaling exponent between successive 4x budgets
+        e1 = math.log(ts[1] / ts[0], 4)
+        e2 = math.log(ts[2] / ts[1], 4)
+        rows.append((f"comm_T_vs_K_{kind}", dt * 1e6,
+                     f"T={ts} exponents=({e1:.2f},{e2:.2f}) "
+                     f"[0.5 => T~sqrt(K), 1.0 => T~K]"))
+    return rows

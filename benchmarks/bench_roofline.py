@@ -1,0 +1,33 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+def run():
+    path = os.environ.get("DRYRUN_JSON", "reports/dryrun.json")
+    rows = []
+    t0 = time.time()
+    if not os.path.exists(path):
+        return [("roofline_table", 0.0,
+                 f"missing {path}; run python -m repro.launch.dryrun --all")]
+    with open(path) as f:
+        results = json.load(f)
+    ok = [r for r in results if r.get("status") == "OK"
+          and r.get("mesh") == "16x16" and "roofline" in r]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"])):
+        rf = r["roofline"]
+        rows.append((
+            f"roofline_{r['arch']}_{r['shape']}",
+            (time.time() - t0) * 1e6 / max(len(ok), 1),
+            f"compute={rf['compute_s']:.3e}s mem={rf['memory_s']:.3e}s "
+            f"coll={rf['collective_s']:.3e}s dominant={rf['dominant']} "
+            f"useful={rf['useful_ratio']:.3f}"))
+    skips = [r for r in results if r.get("status") == "SKIP"
+             and r.get("mesh") == "16x16"]
+    for r in skips:
+        rows.append((f"roofline_{r['arch']}_{r['shape']}", 0.0,
+                     "SKIP: " + r.get("reason", "")[:80]))
+    return rows

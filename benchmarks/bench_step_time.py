@@ -1,0 +1,55 @@
+"""Wall-clock per-call timings of the core computational steps (CPU host).
+
+Measures the jitted FL round step and serve step on reduced architectures
+(one per family) — the us_per_call column of the harness.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import RunConfig, get_config, reduced
+from repro.core import fl_step
+from repro.data import FederatedBatcher
+from repro.models import init_cache, init_params, serve_step
+
+
+ARCHS = ["gemma-2b", "qwen2-moe-a2.7b", "mamba2-780m", "hymba-1.5b"]
+
+
+def _time(fn, *args, n=5):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6
+
+
+def run():
+    rows = []
+    for arch in ARCHS:
+        cfg = reduced(get_config(arch))
+        run_cfg = RunConfig(model=cfg)
+        params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+        batcher = FederatedBatcher(cfg, batch_size=2, seq_len=64, seed=0)
+        batch = batcher.global_batch(1, 0)
+        step = jax.jit(fl_step.make_train_step(
+            cfg, run_cfg, n_client_shards=1, client_axis=None))
+        us = _time(lambda p, b: step(p, None, b, jnp.float32(0.01),
+                                     jax.random.PRNGKey(1)), params, batch)
+        rows.append((f"train_step_{arch}_reduced", us,
+                     "2L reduced, B2xS64, CPU"))
+
+        cache = init_cache(cfg, 2, 32, jnp.float32)
+        tokens = batch["tokens"][0][:, :1]
+        sstep = jax.jit(lambda p, c, t: serve_step(cfg, p, c, t,
+                                                   jnp.int32(0),
+                                                   seq_len=32))
+        us = _time(sstep, params, cache, tokens)
+        rows.append((f"serve_step_{arch}_reduced", us,
+                     "decode 1 token, cache 32"))
+    return rows

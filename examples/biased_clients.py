@@ -1,0 +1,45 @@
+"""Biased (label-skewed) client datasets — the paper's Fig 2 regime.
+
+Client 0 holds (almost) only positives, client 1 only negatives; the
+asynchronous protocol still converges to the global objective.
+
+    PYTHONPATH=src python examples/biased_clients.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import SampleSequenceConfig, StepSizeConfig
+from repro.core import (AsyncFLSimulator, LogRegTask, round_stepsizes,
+                        rounds_for_budget)
+from repro.data import biased_split, make_binary_dataset, unbiased_split
+
+
+def run(shards, X, y, label):
+    sizes = rounds_for_budget(
+        SampleSequenceConfig(kind="linear", s0=100, a=100.0), 6_000)
+    etas = round_stepsizes(
+        StepSizeConfig(kind="inv_t", eta0=0.01, beta=0.001), sizes)
+    global_task = LogRegTask(X, y, l2=1.0 / len(X))
+    sim = AsyncFLSimulator(
+        global_task, n_clients=len(shards),
+        sizes_per_client=[[max(1, s // len(shards)) for s in sizes]]
+        * len(shards),
+        round_stepsizes=etas, d=1, seed=0)
+    for c, (sx, sy) in enumerate(shards):
+        sim.clients[c].task = LogRegTask(sx, sy, l2=1.0 / len(sx))
+    res = sim.run(max_rounds=len(sizes))
+    print(f"[{label:9s}] rounds={res['final']['round']} "
+          f"global-test acc={res['final']['accuracy']:.4f}")
+    return res["final"]["accuracy"]
+
+
+def main():
+    X, y = make_binary_dataset(4_000, 16, seed=6, noise=0.3)
+    a_u = run(unbiased_split(X, y, 2, seed=0), X, y, "unbiased")
+    a_b = run(biased_split(X, y, 2, bias=1.0, seed=0), X, y, "biased")
+    print(f"=> difference {abs(a_u - a_b):.4f}: the protocol tolerates "
+          "label-skewed clients (paper Fig 2)")
+
+
+if __name__ == "__main__":
+    main()

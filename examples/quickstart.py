@@ -1,0 +1,53 @@
+"""Quickstart: asynchronous FL on a strongly-convex problem in ~60 lines.
+
+Reproduces the paper's core recipe — increasing sample sizes + diminishing
+round step sizes — and compares against original (constant/constant) FL.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import SampleSequenceConfig, StepSizeConfig
+from repro.core import (AsyncFLSimulator, LogRegTask, round_stepsizes,
+                        rounds_for_budget, run_sync_baseline)
+from repro.data import make_binary_dataset
+
+
+def main():
+    # 1. data + strongly-convex objective (logistic regression + L2)
+    X, y = make_binary_dataset(n=4_000, d=32, seed=0, noise=0.3)
+    task = LogRegTask(X, y, l2=1.0 / len(X))
+    K = 8_000                      # total gradient budget
+    n_clients = 5
+
+    # 2. the paper's recipe: s_i = 100 + 100 i,  eta_i = 0.1 / (1 + 0.001 t)
+    sizes = rounds_for_budget(
+        SampleSequenceConfig(kind="linear", s0=100, a=100.0), K)
+    etas = round_stepsizes(
+        StepSizeConfig(kind="inv_t", eta0=0.1, beta=0.001), sizes)
+
+    # 3. run the asynchronous protocol (event-driven network simulator)
+    sim = AsyncFLSimulator(
+        task, n_clients=n_clients,
+        sizes_per_client=[[max(1, s // n_clients) for s in sizes]]
+        * n_clients,
+        round_stepsizes=etas, d=1, seed=0,
+        speeds=[1.0, 0.8, 1.2, 0.9, 1.1])   # heterogeneous clients
+    res = sim.run(max_rounds=len(sizes))
+    print(f"[async, increasing]  rounds={res['final']['round']:3d} "
+          f"acc={res['final']['accuracy']:.4f} "
+          f"messages={res['final']['messages']}")
+
+    # 4. original FL baseline: constant step + constant sample size
+    const = run_sync_baseline(task, n_clients=n_clients,
+                              n_rounds=K // 400,
+                              sample_size=400 // n_clients, eta=0.0025)
+    print(f"[sync,  constant]    rounds={const['final']['round']:3d} "
+          f"acc={const['final']['accuracy']:.4f}")
+    print("=> same-or-better accuracy in far fewer communication rounds "
+          "(paper Fig 1a)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.checkpoint.io import (load_fl_state, load_pytree, save_fl_state,
+                                 save_pytree)
+
+__all__ = ["load_fl_state", "load_pytree", "save_fl_state", "save_pytree"]

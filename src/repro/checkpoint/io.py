@@ -1,0 +1,79 @@
+"""Pytree checkpointing (npz container + structure manifest).
+
+FL-aware: ``save_fl_state`` persists the global model, server round
+counter, per-client progress, and RNG so an interrupted run resumes
+mid-protocol (the paper's server/clients are long-running processes).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub" or str(arr.dtype) == "bfloat16":
+            # npz cannot round-trip ml_dtypes (bf16 etc.): widen to f32
+            # (lossless for bf16); the template dtype restores it on load
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_pytree(path: str, tree, *, metadata: Optional[Dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    np.savez(path, **flat)
+    manifest = {
+        "keys": sorted(flat),
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "metadata": metadata or {},
+    }
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_pytree(path: str, template) -> Any:
+    """Restore into the template's structure (keys must match)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path_k, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_k)
+        arr = data[key]
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype)
+                      if hasattr(leaf, "dtype") else jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_fl_state(directory: str, *, global_model, server_k: int,
+                  client_states: Optional[Dict[int, Dict]] = None,
+                  step_metadata: Optional[Dict] = None) -> None:
+    os.makedirs(directory, exist_ok=True)
+    save_pytree(os.path.join(directory, "global_model.npz"), global_model,
+                metadata={"server_k": server_k, **(step_metadata or {})})
+    if client_states:
+        summary = {str(c): {k: v for k, v in st.items()
+                            if isinstance(v, (int, float, str))}
+                   for c, st in client_states.items()}
+        with open(os.path.join(directory, "clients.json"), "w") as f:
+            json.dump(summary, f, indent=1)
+
+
+def load_fl_state(directory: str, template) -> Tuple[Any, int]:
+    path = os.path.join(directory, "global_model.npz")
+    model = load_pytree(path, template)
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    return model, int(manifest["metadata"].get("server_k", 0))

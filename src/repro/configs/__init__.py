@@ -1,0 +1,10 @@
+from repro.configs.base import (DPConfig, FLConfig, INPUT_SHAPES, ModelConfig,
+                                RunConfig, SampleSequenceConfig, ShapeConfig,
+                                StepSizeConfig, reduced)
+from repro.configs.registry import ASSIGNED_ARCHS, get_config, list_archs
+
+__all__ = [
+    "DPConfig", "FLConfig", "INPUT_SHAPES", "ModelConfig", "RunConfig",
+    "SampleSequenceConfig", "ShapeConfig", "StepSizeConfig", "reduced",
+    "ASSIGNED_ARCHS", "get_config", "list_archs",
+]

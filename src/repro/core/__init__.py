@@ -1,0 +1,25 @@
+# The paper's primary contribution: the asynchronous FL protocol with
+# increasing sample-size sequences, diminishing round step sizes,
+# permissible-delay gating, and the DP-ready round computation.
+from repro.core.delay import ConstantDelay, SqrtDelay, Theorem5Delay
+from repro.core.protocol import BroadcastMsg, Client, Server, UpdateMsg
+from repro.core.sequences import (communication_rounds_vs_constant,
+                                  lemma1_sequence, rounds_for_budget,
+                                  sample_size, sample_sizes,
+                                  satisfies_condition3)
+from repro.core.simulator import AsyncFLSimulator, run_sync_baseline
+from repro.core.stepsizes import (eta_t, per_iteration_stepsizes,
+                                  round_stepsizes, theorem5_round_stepsizes)
+from repro.core.tasks import BatchModelTask, LogRegTask
+
+__all__ = [
+    "ConstantDelay", "SqrtDelay", "Theorem5Delay",
+    "BroadcastMsg", "Client", "Server", "UpdateMsg",
+    "communication_rounds_vs_constant", "lemma1_sequence",
+    "rounds_for_budget", "sample_size", "sample_sizes",
+    "satisfies_condition3",
+    "AsyncFLSimulator", "run_sync_baseline",
+    "eta_t", "per_iteration_stepsizes", "round_stepsizes",
+    "theorem5_round_stepsizes",
+    "BatchModelTask", "LogRegTask",
+]

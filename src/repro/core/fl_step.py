@@ -1,0 +1,118 @@
+"""Jitted, sharded FL round step for LLM-scale architectures.
+
+Maps the paper's protocol onto the TPU mesh:
+  * the leading batch axis C indexes FL *client cohorts* (multi-pod: one
+    cohort per pod, vmapped with ``spmd_axis_name='pod'`` so per-client
+    gradients stay pod-local);
+  * within a cohort: data-parallel batch + tensor-parallel model;
+  * per-client DP: the cohort's round update U_c is clipped to C and
+    Gaussian noise N(0, C²σ²) added (Algorithm 1 lines 17/23 adapted to
+    user-level DP, see DESIGN.md §3);
+  * the server step ``w ← w − η̄ Σ_c U_c`` is the trailing cross-pod
+    all-reduce — the paper's per-round communication, whose *count* the
+    increasing sample-size sequence divides by T_const/T_incr.
+
+``serve_step`` / ``prefill_step`` cover the inference shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_api
+
+
+def tree_global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree_util.tree_leaves(tree)))
+
+
+def tree_clip(tree, clip_norm: float):
+    norm = tree_global_norm(tree)
+    scale = (1.0 / jnp.maximum(1.0, norm / clip_norm)).astype(jnp.float32)
+    return jax.tree_util.tree_map(
+        lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype), tree)
+
+
+def tree_add_noise(tree, rng, stddev: float):
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(rng, len(flat))
+    out = [l + stddev * jax.random.normal(k, l.shape, l.dtype)
+           for l, k in zip(flat, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def make_train_step(cfg, run_cfg, *, n_client_shards: int,
+                    client_axis: Optional[str], unroll: bool = False,
+                    grad_pspecs=None):
+    """Build train_step(params, momentum, batch, eta_bar, rng).
+
+    batch: dict of arrays with leading (C, B_local, ...) axes.
+    Returns (new_params, new_momentum, metrics).
+
+    grad_pspecs: optional PartitionSpec tree matching params — pins each
+    client's gradient to the parameter sharding, so GSPMD reduces partial
+    gradients with reduce-scatter instead of a full all-reduce (measured
+    305 TB -> see EXPERIMENTS.md §Perf, grok-1 iteration 1).
+    """
+    dp = run_cfg.fl.dp
+    momentum_coef = 0.0  # paper uses plain SGD; momentum available via optim
+
+    def per_client_update(params, client_batch, rng):
+        loss, g = jax.value_and_grad(
+            lambda p: model_api.train_loss(cfg, p, client_batch,
+                                           remat=run_cfg.remat,
+                                           unroll=unroll))(params)
+        if grad_pspecs is not None:
+            g = jax.lax.with_sharding_constraint(g, grad_pspecs)
+        if dp.enabled:
+            g = tree_clip(g, dp.clip_norm)
+            g = tree_add_noise(g, rng, dp.clip_norm * dp.sigma)
+        return g, loss
+
+    def train_step(params, momentum, batch, eta_bar, rng):
+        rngs = jax.random.split(rng, n_client_shards)
+        if n_client_shards > 1:
+            grads, losses = jax.vmap(
+                per_client_update, in_axes=(None, 0, 0),
+                spmd_axis_name=client_axis)(params, batch, rngs)
+            # server aggregate: sum over clients (cross-pod all-reduce)
+            U = jax.tree_util.tree_map(lambda g: jnp.sum(g, axis=0), grads)
+            loss = jnp.mean(losses)
+        else:
+            squeezed = jax.tree_util.tree_map(lambda a: a[0], batch)
+            U, loss = per_client_update(params, squeezed, rngs[0])
+
+        if momentum is not None:
+            momentum = jax.tree_util.tree_map(
+                lambda m, u: momentum_coef * m + u.astype(m.dtype),
+                momentum, U)
+            upd = momentum
+        else:
+            upd = U
+        new_params = jax.tree_util.tree_map(
+            lambda p, u: (p.astype(jnp.float32)
+                          - eta_bar * u.astype(jnp.float32)).astype(p.dtype),
+            params, upd)
+        metrics = {"loss": loss.astype(jnp.float32),
+                   "update_norm": tree_global_norm(U)}
+        return new_params, momentum, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg, run_cfg, *, seq_len: int, unroll: bool = False):
+    def serve_step(params, cache, tokens, pos):
+        return model_api.serve_step(cfg, params, cache, tokens, pos,
+                                    seq_len=seq_len, unroll=unroll)
+    return serve_step
+
+
+def make_prefill_step(cfg, run_cfg, *, unroll: bool = False):
+    def prefill_step(params, batch):
+        return model_api.forward_prefill(cfg, params, batch,
+                                         remat=run_cfg.remat, unroll=unroll)
+    return prefill_step

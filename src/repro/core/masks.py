@@ -1,0 +1,66 @@
+"""General-recursion masks (Supp. C.1, recursion (9), D > 1).
+
+Each client applies a diagonal 0/1 "filter" S_u^ξ to its gradient: the
+model coordinates are partitioned into D near-equal groups; per iteration
+one group u is drawn uniformly and only those coordinates are computed,
+updated, and TRANSMITTED — cutting per-round communication by ~D at the
+cost of gradient sparsification.  The correction factor d_ξ = D keeps the
+update unbiased: d_ξ E[S_u^ξ | ξ] = D_ξ (equation (10)).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def make_partition(params_template, D: int, *, seed: int = 0):
+    """Partition the flattened coordinate space into D near-equal groups.
+
+    Returns a pytree of int32 leaves with values in [0, D) — the group id
+    of every coordinate.
+    """
+    key = jax.random.PRNGKey(seed)
+    leaves, treedef = jax.tree_util.tree_flatten(params_template)
+    out = []
+    for idx, leaf in enumerate(leaves):
+        k = jax.random.fold_in(key, idx)
+        # random balanced assignment: shuffle repeated 0..D-1 pattern
+        n = leaf.size
+        base = jnp.tile(jnp.arange(D, dtype=jnp.int32), (n + D - 1) // D)[:n]
+        perm = jax.random.permutation(k, n)
+        out.append(base[perm].reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def mask_for_group(partition, u: int):
+    """Boolean mask pytree selecting group u."""
+    return jax.tree_util.tree_map(lambda g: g == u, partition)
+
+
+def apply_masked_update(grad, partition, u: int, D: int):
+    """d_ξ · S_u^ξ ∇f  — the masked, unbiasedness-corrected update."""
+    return jax.tree_util.tree_map(
+        lambda g, part: jnp.where(part == u, D * g.astype(jnp.float32),
+                                  0.0).astype(g.dtype),
+        grad, partition)
+
+
+def masked_update_nbytes(update, partition, u: int) -> int:
+    """Bytes a client actually transmits (masked coordinates only)."""
+    total = 0
+    for g, part in zip(jax.tree_util.tree_leaves(update),
+                       jax.tree_util.tree_leaves(partition)):
+        total += int(jnp.sum(part == u)) * g.dtype.itemsize
+    return total
+
+
+def expectation_check(grad, partition, D: int):
+    """E_u[d S_u g] over the uniform u — should equal g exactly."""
+    acc = jax.tree_util.tree_map(jnp.zeros_like, grad)
+    for u in range(D):
+        upd = apply_masked_update(grad, partition, u, D)
+        acc = jax.tree_util.tree_map(
+            lambda a, b: a + b.astype(a.dtype) / D, acc, upd)
+    return acc

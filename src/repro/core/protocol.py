@@ -1,0 +1,151 @@
+"""Client and server state machines — Algorithms 1–4 of the paper.
+
+Transport-agnostic: the discrete-event simulator (``repro.core.simulator``)
+or a real RPC layer delivers messages.  The computational payload is a
+``Task`` (``repro.core.tasks``) so the same protocol drives the paper's
+logistic-regression experiments and LLM-scale rounds.
+
+Faithfulness notes:
+* Server (Algorithm 3): applies U on dequeue (``v ← v − η̄_i U``), tracks
+  received (i, c) pairs in H, broadcasts (v, k) once round k is complete
+  from all clients, then increments k.
+* Client (Algorithm 4 + DP lines 17/23/24 of Algorithm 1): runs s_{i,c}
+  local SGD iterations per round, accumulates U, optionally clips per
+  sample and adds batch Gaussian noise; ISRRECEIVE replaces the local
+  model with v̂ − η̄_i · U (fresher global model minus own unaccounted
+  current-round updates).
+* Wait gate (Supp. B.2): the τ(t_glob) ≤ t_delay loop is replaced by the
+  equivalent gate "block while i == k + d" once condition (3) holds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+
+@dataclass
+class UpdateMsg:
+    round_idx: int
+    client_id: int
+    U: Any                      # pytree: sum of (clipped, noised) gradients
+
+
+@dataclass
+class BroadcastMsg:
+    v: Any                      # global model pytree
+    k: int                      # completed-round counter
+
+
+# ---------------------------------------------------------------------------
+# Server — Algorithm 3
+# ---------------------------------------------------------------------------
+
+class Server:
+    def __init__(self, v0, n_clients: int, round_stepsizes: Sequence[float]):
+        self.v = v0
+        self.n_clients = n_clients
+        self.eta_bar = list(round_stepsizes)
+        self.k = 0
+        self.H: set = set()
+        self.processed: List[Tuple[int, int]] = []   # audit log
+
+    def eta(self, i: int) -> float:
+        return self.eta_bar[min(i, len(self.eta_bar) - 1)]
+
+    def receive(self, msg: UpdateMsg) -> Optional[BroadcastMsg]:
+        """Process one queued client update; maybe emit a broadcast."""
+        eta = self.eta(msg.round_idx)
+        self.v = jax.tree_util.tree_map(
+            lambda v, u: v - eta * u, self.v, msg.U)
+        self.H.add((msg.round_idx, msg.client_id))
+        self.processed.append((msg.round_idx, msg.client_id))
+        if all((self.k, c) in self.H for c in range(self.n_clients)):
+            for c in range(self.n_clients):
+                self.H.discard((self.k, c))
+            self.k += 1
+            return BroadcastMsg(v=self.v, k=self.k)
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Client — Algorithm 4 (+ Algorithm 1 DP lines)
+# ---------------------------------------------------------------------------
+
+class Client:
+    def __init__(self, client_id: int, w0, task, sizes: Sequence[int],
+                 round_stepsizes: Sequence[float], d: int, seed: int):
+        self.id = client_id
+        self.task = task
+        self.w = w0
+        self.U = task.zero_update()
+        self.sizes = list(sizes)               # s_{i,c}
+        self.eta_bar = list(round_stepsizes)
+        self.d = d
+        self.i = 0                             # current round
+        self.h = 0                             # iterations done in round i
+        self.k = 0                             # latest broadcast counter seen
+        self.rng = jax.random.PRNGKey(seed)
+        self.sent_rounds: List[int] = []
+        # diagnostics for Theorem 1's invariant t_delay <= tau(t_glob)
+        self.delay_trace: List[Tuple[int, int]] = []
+
+    # -- protocol --------------------------------------------------------
+    def eta(self, i: int) -> float:
+        return self.eta_bar[min(i, len(self.eta_bar) - 1)]
+
+    def s(self, i: int) -> int:
+        return self.sizes[min(i, len(self.sizes) - 1)]
+
+    @property
+    def blocked(self) -> bool:
+        """Wait gate: block while i == k + d (Supp. B.2)."""
+        return self.i >= self.k + self.d
+
+    def remaining_in_round(self) -> int:
+        return self.s(self.i) - self.h
+
+    def run(self, n_iters: int) -> None:
+        """Advance n local SGD iterations (n <= remaining_in_round)."""
+        assert not self.blocked and n_iters <= self.remaining_in_round()
+        self.rng, sub = jax.random.split(self.rng)
+        self.w, self.U = self.task.run_iterations(
+            self.w, self.U, round_idx=self.i, client_id=self.id,
+            start_h=self.h, n_iters=n_iters, eta=self.eta(self.i), rng=sub)
+        self.h += n_iters
+
+    def finish_round(self) -> UpdateMsg:
+        """Round complete: draw DP batch noise, send (i, c, U), advance."""
+        assert self.h == self.s(self.i)
+        self.rng, sub = jax.random.split(self.rng)
+        self.w, self.U = self.task.add_round_noise(
+            self.w, self.U, eta=self.eta(self.i), rng=sub)
+        msg = UpdateMsg(round_idx=self.i, client_id=self.id, U=self.U)
+        self.sent_rounds.append(self.i)
+        self.i += 1
+        self.h = 0
+        self.U = self.task.zero_update()
+        return msg
+
+    def isr_receive(self, msg: BroadcastMsg) -> None:
+        """Algorithm 4 ISRRECEIVE: accept only fresher global models."""
+        if msg.k > self.k:
+            self.k = msg.k
+            eta = self.eta(self.i)
+            self.w = jax.tree_util.tree_map(
+                lambda v, u: v - eta * u, msg.v, self.U)
+
+    # -- Theorem 1 bookkeeping --------------------------------------------
+    def record_delay(self, global_sizes: Sequence[int]) -> Tuple[int, int]:
+        """(t_glob, t_delay) at the current iteration (paper lines 12-13)."""
+        s = global_sizes
+        cum = 0
+        for j in range(min(self.i + 1, len(s))):
+            cum += s[j]
+        t_glob = cum - (self.s(self.i) - self.h) - 1
+        t_delay = sum(s[j] for j in range(self.k, min(self.i + 1, len(s)))) \
+            - (self.s(self.i) - self.h)
+        self.delay_trace.append((t_glob, t_delay))
+        return t_glob, t_delay

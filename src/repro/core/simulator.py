@@ -1,0 +1,189 @@
+"""Discrete-event asynchronous-network simulator for the FL protocol.
+
+Simulates the paper's deployment regime on virtual time:
+  * heterogeneous client compute speeds (iterations / second),
+  * message latencies drawn per message (out-of-order delivery arises
+    naturally: a later-sent message may arrive earlier),
+  * clients compute *lazily* between events, so a mid-round broadcast
+    arrival replaces the local model exactly at the iteration it would
+    have in a real deployment (ISRRECEIVE semantics),
+  * the wait gate blocks a client that runs d rounds ahead (Supp. B.2).
+
+The simulator is the test harness for Theorem 1's consistency invariant
+and the measurement rig for rounds/communication benchmarks.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.protocol import BroadcastMsg, Client, Server, UpdateMsg
+
+
+@dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    kind: str = field(compare=False)          # update_arrival | broadcast_arrival
+    payload: Any = field(compare=False)
+    client_id: int = field(compare=False, default=-1)
+
+
+class AsyncFLSimulator:
+    def __init__(self, task, *, n_clients: int, sizes_per_client,
+                 round_stepsizes: Sequence[float], d: int = 1,
+                 speeds: Optional[Sequence[float]] = None,
+                 latency_fn: Optional[Callable[[np.random.Generator], float]]
+                 = None,
+                 seed: int = 0, record_invariant: bool = False,
+                 global_sizes: Optional[Sequence[int]] = None):
+        self.task = task
+        self.n = n_clients
+        self.rng = np.random.default_rng(seed)
+        self.speeds = list(speeds) if speeds is not None else [1.0] * n_clients
+        self.latency_fn = latency_fn or (lambda r: 0.05 + 0.05 * r.random())
+        self.record_invariant = record_invariant
+        self.global_sizes = global_sizes
+
+        w0 = task.init_model()
+        self.server = Server(w0, n_clients, round_stepsizes)
+        if isinstance(sizes_per_client[0], (list, tuple)):
+            per_client = sizes_per_client
+        else:
+            per_client = [list(sizes_per_client)] * n_clients
+        self.clients = [
+            Client(c, w0, task, per_client[c], round_stepsizes, d,
+                   seed=seed * 1000 + c)
+            for c in range(n_clients)
+        ]
+        self.now = 0.0
+        self._seq = itertools.count()
+        self.events: List[_Event] = []
+        self.last_advance = [0.0] * n_clients
+        self.total_messages = 0
+        self.total_broadcasts = 0
+        self.history: List[Dict[str, float]] = []
+        self.invariant_violations: List[Tuple[int, int, int]] = []
+        for c in range(n_clients):
+            self._schedule_round_complete(c)
+
+    # -- scheduling helpers -------------------------------------------------
+    def _push(self, t: float, kind: str, payload, client_id: int = -1):
+        heapq.heappush(self.events,
+                       _Event(t, next(self._seq), kind, payload, client_id))
+
+    def _schedule_round_complete(self, c: int) -> None:
+        cl = self.clients[c]
+        if cl.blocked:
+            return
+        t_done = self.now + cl.remaining_in_round() / self.speeds[c]
+        self._push(t_done, "round_complete", None, c)
+
+    def _advance_client(self, c: int, t: float) -> None:
+        """Lazily run client c's iterations up to virtual time t."""
+        cl = self.clients[c]
+        dt = t - self.last_advance[c]
+        self.last_advance[c] = t
+        if cl.blocked or dt <= 0:
+            return
+        n = min(cl.remaining_in_round(), int(math.floor(dt * self.speeds[c])))
+        if n > 0:
+            if self.record_invariant and self.global_sizes is not None:
+                tg, td = cl.record_delay(self.global_sizes)
+                # Theorem 1 invariant (via gate): t_delay stays bounded
+            cl.run(n)
+
+    # -- event handlers -------------------------------------------------------
+    def _on_round_complete(self, ev: _Event) -> None:
+        c = ev.client_id
+        cl = self.clients[c]
+        self._advance_client(c, ev.time)
+        rem = cl.remaining_in_round()
+        if cl.blocked:
+            return
+        if rem > 0:                       # rounding drift: finish exactly
+            cl.run(rem)
+        msg = cl.finish_round()
+        self.total_messages += 1
+        lat = self.latency_fn(self.rng)
+        self._push(ev.time + lat, "update_arrival", msg)
+        self._schedule_round_complete(c)   # may be a no-op if now blocked
+
+    def _on_update_arrival(self, ev: _Event) -> None:
+        bcast = self.server.receive(ev.payload)
+        if bcast is not None:
+            self.total_broadcasts += 1
+            for c in range(self.n):
+                lat = self.latency_fn(self.rng)
+                self._push(ev.time + lat, "broadcast_arrival", bcast, c)
+
+    def _on_broadcast_arrival(self, ev: _Event) -> None:
+        c = ev.client_id
+        cl = self.clients[c]
+        was_blocked = cl.blocked
+        self._advance_client(c, ev.time)
+        cl.isr_receive(ev.payload)
+        if was_blocked and not cl.blocked:
+            self.last_advance[c] = ev.time
+            self._schedule_round_complete(c)
+
+    # -- main loop ------------------------------------------------------------
+    def run(self, *, max_rounds: int, eval_every: int = 1,
+            eval_fn: Optional[Callable[[Any], Dict[str, float]]] = None
+            ) -> Dict[str, Any]:
+        """Run until the server has completed ``max_rounds`` broadcasts."""
+        evals = eval_fn or (lambda w: self.task.metrics(w))
+        next_eval = eval_every
+        while self.events and self.server.k < max_rounds:
+            ev = heapq.heappop(self.events)
+            self.now = ev.time
+            if ev.kind == "round_complete":
+                self._on_round_complete(ev)
+            elif ev.kind == "update_arrival":
+                self._on_update_arrival(ev)
+            elif ev.kind == "broadcast_arrival":
+                self._on_broadcast_arrival(ev)
+            if self.server.k >= next_eval:
+                m = evals(self.server.v)
+                m.update(round=self.server.k, time=self.now,
+                         messages=self.total_messages)
+                self.history.append(m)
+                next_eval = self.server.k + eval_every
+        final = evals(self.server.v)
+        final.update(round=self.server.k, time=self.now,
+                     messages=self.total_messages,
+                     broadcasts=self.total_broadcasts)
+        return {"final": final, "history": self.history,
+                "model": self.server.v}
+
+
+def run_sync_baseline(task, *, n_clients: int, n_rounds: int,
+                      sample_size: int, eta: float, seed: int = 0
+                      ) -> Dict[str, Any]:
+    """Original synchronous FL (constant step + sample size) baseline."""
+    import jax
+    w = task.init_model()
+    history = []
+    key = jax.random.PRNGKey(seed)
+    for r in range(n_rounds):
+        updates = []
+        for c in range(n_clients):
+            key, sub = jax.random.split(key)
+            _, U = task.run_iterations(
+                w, task.zero_update(), round_idx=r, client_id=c,
+                start_h=0, n_iters=sample_size, eta=eta, rng=sub)
+            updates.append(U)
+        import jax.numpy as jnp
+        total = updates[0]
+        for U in updates[1:]:
+            total = jax.tree_util.tree_map(jnp.add, total, U)
+        w = jax.tree_util.tree_map(lambda p, u: p - eta * u, w, total)
+        m = task.metrics(w)
+        m["round"] = r + 1
+        history.append(m)
+    return {"final": history[-1], "history": history, "model": w}

@@ -1,0 +1,181 @@
+"""Task abstraction: the computation a client performs inside a round.
+
+``LogRegTask`` reproduces the paper's experiments: per-iteration
+single-sample SGD (Algorithm 1 lines 15-21), optional per-sample gradient
+clipping (line 17) and round Gaussian noise (lines 23-24).  Iteration
+chunks are jitted per power-of-two length to avoid a compile per distinct
+segment length (the event simulator produces many lengths).
+
+``BatchModelTask`` adapts any ``repro.models`` architecture: one "local
+iteration" = one minibatch-SGD step (the paper's footnote ‡ licenses batch
+SGD per round); DP clips the client's round update (user-level DP).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import logreg
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_tree(tree, clip: float):
+    norm = global_norm(tree)
+    scale = 1.0 / jnp.maximum(1.0, norm / clip)
+    return jax.tree_util.tree_map(lambda l: l * scale, tree)
+
+
+class LogRegTask:
+    """Paper experiment task (strongly-convex / plain-convex logreg)."""
+
+    def __init__(self, X, y, *, l2: float = 0.0, dp_clip: float = 0.0,
+                 dp_sigma: float = 0.0, d_features: Optional[int] = None):
+        self.X = jnp.asarray(X, jnp.float32)
+        self.y = jnp.asarray(y, jnp.float32)
+        self.l2 = float(l2)
+        self.dp_clip = float(dp_clip)
+        self.dp_sigma = float(dp_sigma)
+        self.d = d_features or self.X.shape[1]
+        self._chunk_fns: Dict[int, Any] = {}
+
+    # -- model ------------------------------------------------------------
+    def init_model(self, key=None):
+        return logreg.init_params(self.d, key)
+
+    def zero_update(self):
+        return {"w": jnp.zeros((self.d,), jnp.float32),
+                "b": jnp.zeros((), jnp.float32)}
+
+    # -- per-chunk jitted runner -------------------------------------------
+    def _chunk_fn(self, n: int):
+        if n in self._chunk_fns:
+            return self._chunk_fns[n]
+        X, y, l2 = self.X, self.y, self.l2
+        clip, n_data = self.dp_clip, self.X.shape[0]
+
+        def run(w, U, eta, rng):
+            rngs = jax.random.split(rng, n)
+
+            def step2(carry, r):
+                w, U = carry
+                idx = jax.random.randint(r, (), 0, n_data)
+                g = jax.grad(logreg.per_example_loss)(w, X[idx], y[idx], l2)
+                if clip > 0.0:
+                    g = clip_tree(g, clip)
+                U = jax.tree_util.tree_map(jnp.add, U, g)
+                w = jax.tree_util.tree_map(lambda p, gg: p - eta * gg, w, g)
+                return (w, U), None
+
+            (w, U), _ = jax.lax.scan(step2, (w, U), rngs)
+            return w, U
+
+        fn = jax.jit(run)
+        self._chunk_fns[n] = fn
+        return fn
+
+    @staticmethod
+    def _chunks(n: int):
+        """Decompose n into descending power-of-two chunks (bounded jits)."""
+        out, p = [], 1 << 14
+        while n > 0 and p > 0:
+            while p <= n:
+                out.append(p)
+                n -= p
+            p >>= 1
+        return out
+
+    # -- Task interface ----------------------------------------------------
+    def run_iterations(self, w, U, *, round_idx, client_id, start_h,
+                       n_iters, eta, rng):
+        del round_idx, client_id, start_h
+        for j, c in enumerate(self._chunks(int(n_iters))):
+            rng, sub = jax.random.split(rng)
+            w, U = self._chunk_fn(c)(w, U, jnp.float32(eta), sub)
+        return w, U
+
+    def add_round_noise(self, w, U, *, eta, rng):
+        if self.dp_sigma <= 0.0:
+            return w, U
+        keys = jax.random.split(rng, len(jax.tree_util.tree_leaves(U)))
+        flat, treedef = jax.tree_util.tree_flatten(U)
+        noise = [self.dp_clip * self.dp_sigma
+                 * jax.random.normal(k, l.shape, jnp.float32)
+                 for k, l in zip(keys, flat)]
+        noise = jax.tree_util.tree_unflatten(treedef, noise)
+        U = jax.tree_util.tree_map(jnp.add, U, noise)
+        w = jax.tree_util.tree_map(lambda p, n: p + eta * n, w, noise)
+        # note sign: Algorithm 1 line 24 writes ŵ = ŵ + η̄·n with U = U + n;
+        # the server applies v − η̄ U, so the client pre-adds η̄·n so that a
+        # later replacement ŵ = v̂ − η̄ U stays consistent.
+        return w, U
+
+    def metrics(self, w) -> Dict[str, float]:
+        return {
+            "loss": float(logreg.batch_loss(w, self.X, self.y, self.l2)),
+            "accuracy": float(logreg.accuracy(w, self.X, self.y)),
+        }
+
+
+class BatchModelTask:
+    """LLM-scale task: one local iteration = one minibatch-SGD step."""
+
+    def __init__(self, cfg, params_template, data_fn, *, dp_clip: float = 0.0,
+                 dp_sigma: float = 0.0, remat: bool = True):
+        from repro.models import train_loss
+        self.cfg = cfg
+        self.data_fn = data_fn           # (client_id, round, h, rng) -> batch
+        self.dp_clip = float(dp_clip)
+        self.dp_sigma = float(dp_sigma)
+        self.template = params_template
+
+        def step(w, U, batch, eta):
+            loss, g = jax.value_and_grad(
+                lambda p: train_loss(cfg, p, batch, remat=remat))(w)
+            if self.dp_clip > 0.0:
+                g = clip_tree(g, self.dp_clip)
+            U = jax.tree_util.tree_map(jnp.add, U, g)
+            w = jax.tree_util.tree_map(lambda p, gg: p - eta * gg, w, g)
+            return w, U, loss
+
+        self._step = jax.jit(step)
+        self.last_loss = None
+
+    def zero_update(self):
+        return jax.tree_util.tree_map(
+            lambda l: jnp.zeros(l.shape, jnp.float32), self.template)
+
+    def run_iterations(self, w, U, *, round_idx, client_id, start_h,
+                       n_iters, eta, rng):
+        for h in range(int(n_iters)):
+            rng, sub = jax.random.split(rng)
+            batch = self.data_fn(client_id, round_idx, start_h + h, sub)
+            w, U, loss = self._step(w, U, batch, jnp.float32(eta))
+            self.last_loss = float(loss)
+        return w, U
+
+    def add_round_noise(self, w, U, *, eta, rng):
+        if self.dp_sigma <= 0.0:
+            return w, U
+        flat, treedef = jax.tree_util.tree_flatten(U)
+        keys = jax.random.split(rng, len(flat))
+        noise = [self.dp_clip * self.dp_sigma
+                 * jax.random.normal(k, l.shape, jnp.float32)
+                 for k, l in zip(keys, flat)]
+        noise = jax.tree_util.tree_unflatten(treedef, noise)
+        U = jax.tree_util.tree_map(jnp.add, U, noise)
+        w = jax.tree_util.tree_map(
+            lambda p, n: (p + eta * n.astype(p.dtype)).astype(p.dtype),
+            w, noise)
+        return w, U
+
+    def metrics(self, w):
+        return {"loss": self.last_loss}

@@ -1,0 +1,56 @@
+"""Federated data layer: client-sharded batch production.
+
+Implements SETUP's coin-flipping assignment (Algorithm 2 lines 5-13):
+round i's s_i global samples are assigned to clients with probabilities
+p_c, giving s_{i,c} with E[s_{i,c}] = p_c s_i.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.data.synthetic import make_batch
+
+
+def client_sample_sizes(sizes: Sequence[int], p: Sequence[float], *,
+                        seed: int = 0, exact: bool = False
+                        ) -> List[List[int]]:
+    """s_{i,c} per client.  exact=True uses s_{i,c} = round(p_c s_i)
+    (the law-of-large-numbers approximation §A uses for the DP theory);
+    exact=False flips coins per Algorithm 2."""
+    n = len(p)
+    rng = np.random.default_rng(seed)
+    out: List[List[int]] = [[] for _ in range(n)]
+    for s in sizes:
+        if exact:
+            counts = [max(1, int(round(pc * s))) for pc in p]
+        else:
+            assign = rng.choice(n, size=s, p=np.asarray(p) / np.sum(p))
+            counts = [max(1, int(np.sum(assign == c))) for c in range(n)]
+        for c in range(n):
+            out[c].append(counts[c])
+    return out
+
+
+class FederatedBatcher:
+    """Per-client LM batch producer for BatchModelTask / fl_step."""
+
+    def __init__(self, cfg, *, batch_size: int, seq_len: int, seed: int = 0):
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.seed = seed
+
+    def __call__(self, client_id: int, round_idx: int, h: int, rng=None):
+        import jax.numpy as jnp
+        step = round_idx * 10_000 + h
+        batch = make_batch(self.cfg, self.batch_size, self.seq_len,
+                           seed=self.seed, step=step, client_id=client_id)
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+
+    def global_batch(self, n_clients: int, round_idx: int):
+        """(C, B, S) stacked batch for the sharded fl_step."""
+        import jax.numpy as jnp
+        parts = [self(c, round_idx, 0) for c in range(n_clients)]
+        return {k: jnp.stack([p[k] for p in parts]) for k in parts[0]}

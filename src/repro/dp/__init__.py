@@ -1,0 +1,19 @@
+from repro.dp.accountant import (SelectedParameters, Theorem4Constants,
+                                 delta_from_budget, moments_delta,
+                                 moments_epsilon, privacy_budget_B,
+                                 r0_sigma, r_from_r0, select_parameters,
+                                 sigma_lower_bound_case1,
+                                 sigma_lower_bound_case2, theorem4_simple_B)
+from repro.dp.mechanism import (add_gaussian_noise, clip_accumulate,
+                                clip_tree, dp_sgd_round, tree_norm)
+
+__all__ = [
+    "SelectedParameters", "Theorem4Constants", "delta_from_budget",
+    "moments_delta", "moments_epsilon", "privacy_budget_B", "r0_sigma",
+    "r_from_r0", "select_parameters", "sigma_lower_bound_case1",
+    "sigma_lower_bound_case2", "theorem4_simple_B",
+    "add_gaussian_noise", "clip_accumulate", "clip_tree", "dp_sgd_round",
+    "tree_norm",
+]
+from repro.dp.planning import compare_constant, plan_dp_fl  # noqa: E402
+__all__ += ["compare_constant", "plan_dp_fl"]

@@ -1,0 +1,96 @@
+"""Gaussian DP mechanism: clipping + noise (Algorithm 1 lines 17, 23–24).
+
+Granularities:
+  * example — per-sample gradient clipping (paper-faithful / Abadi et al.):
+    per-example grads via ``jax.vmap(jax.grad(...))``, each clipped to C,
+    summed, then batch noise N(0, C²σ² I) added once per round.
+  * client  — the client's whole round update U_c is clipped (user-level
+    DP; the LLM-scale adaptation, see DESIGN.md §3).
+
+The fused Pallas kernel for the example-level hot path lives in
+``repro.kernels.dp_clip`` and is verified against :func:`clip_accumulate`.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_tree(tree, clip_norm: float):
+    scale = 1.0 / jnp.maximum(1.0, tree_norm(tree) / clip_norm)
+    return jax.tree_util.tree_map(
+        lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype), tree)
+
+
+def add_gaussian_noise(tree, rng, stddev: float):
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(rng, len(flat))
+    noised = [l + stddev * jax.random.normal(k, l.shape, l.dtype)
+              for l, k in zip(flat, keys)]
+    return jax.tree_util.tree_unflatten(treedef, noised)
+
+
+def clip_accumulate(per_example_grads, clip_norm: float):
+    """Clip each example's gradient tree to ``clip_norm`` and sum.
+
+    per_example_grads: pytree with a leading example axis on every leaf.
+    Pure-jnp oracle for the ``dp_clip`` Pallas kernel.
+    """
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32)),
+                     axis=tuple(range(1, l.ndim)))
+             for l in jax.tree_util.tree_leaves(per_example_grads))
+    norms = jnp.sqrt(sq)                                   # (n_examples,)
+    scales = 1.0 / jnp.maximum(1.0, norms / clip_norm)
+
+    def scale_sum(l):
+        s = scales.reshape((-1,) + (1,) * (l.ndim - 1))
+        return jnp.sum(l.astype(jnp.float32) * s, axis=0)
+
+    return jax.tree_util.tree_map(scale_sum, per_example_grads)
+
+
+def dp_sgd_round(loss_fn: Callable, params, batch, *, clip_norm: float,
+                 sigma: float, rng, microbatch: int = 0
+                 ) -> Tuple[Any, jnp.ndarray]:
+    """One DP round over a batch: per-example clip, sum, noise.
+
+    loss_fn(params, example) -> scalar.  batch: pytree with leading axis N.
+    Returns (U, mean_loss) with U distributed as the paper's round update.
+    """
+    def one(example):
+        return jax.value_and_grad(loss_fn)(params, example)
+
+    def run(examples):
+        losses, grads = jax.vmap(lambda e: one(e))(examples)
+        return losses, clip_accumulate(grads, clip_norm)
+
+    n = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    if microbatch and n % microbatch == 0 and n > microbatch:
+        nm = n // microbatch
+        reshaped = jax.tree_util.tree_map(
+            lambda l: l.reshape((nm, microbatch) + l.shape[1:]), batch)
+
+        def body(carry, mb):
+            losses, U_mb = run(mb)
+            U_tot, loss_tot = carry
+            U_tot = jax.tree_util.tree_map(jnp.add, U_tot, U_mb)
+            return (U_tot, loss_tot + jnp.sum(losses)), None
+
+        zero = jax.tree_util.tree_map(
+            lambda l: jnp.zeros(l.shape, jnp.float32), params)
+        (U, loss_sum), _ = jax.lax.scan(body, (zero, jnp.float32(0.0)),
+                                        reshaped)
+        mean_loss = loss_sum / n
+    else:
+        losses, U = run(batch)
+        mean_loss = jnp.mean(losses)
+
+    U = add_gaussian_noise(U, rng, clip_norm * sigma)
+    return U, mean_loss

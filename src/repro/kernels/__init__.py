@@ -1,0 +1,4 @@
+# TPU Pallas kernels for the paper's compute hot spots.
+# Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit
+# wrapper w/ padding + ref fallback), ref.py (pure-jnp oracle).
+from repro.kernels import dp_clip, flash_attention, ssd_scan  # noqa: F401

@@ -1,0 +1,6 @@
+from repro.kernels.dp_clip.kernel import clip_accumulate_kernel
+from repro.kernels.dp_clip.ops import clip_accumulate, clip_accumulate_tree
+from repro.kernels.dp_clip.ref import clip_accumulate_ref
+
+__all__ = ["clip_accumulate_kernel", "clip_accumulate",
+           "clip_accumulate_tree", "clip_accumulate_ref"]

@@ -1,0 +1,45 @@
+"""Jitted wrapper for the DP clip kernel, with pytree support.
+
+``clip_accumulate_tree`` flattens a per-example gradient pytree into one
+(N, D) matrix (padding D to the block multiple), runs the kernel, and
+unflattens — the layout a real DP-SGD trainer feeds the TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dp_clip.kernel import clip_accumulate_kernel
+from repro.kernels.dp_clip.ref import clip_accumulate_ref
+
+
+@functools.partial(jax.jit, static_argnames=("clip", "d_block",
+                                             "use_kernel", "interpret"))
+def clip_accumulate(g, *, clip: float, d_block: int = 512,
+                    use_kernel: bool = True, interpret: bool = True):
+    if not use_kernel:
+        return clip_accumulate_ref(g, clip)
+    N, D = g.shape
+    pad = (-D) % d_block
+    if pad:
+        g = jnp.pad(g, ((0, 0), (0, pad)))
+    out = clip_accumulate_kernel(g, clip, d_block=d_block,
+                                 interpret=interpret)
+    return out[:D] if pad else out
+
+
+def clip_accumulate_tree(grads, *, clip: float, **kw):
+    """grads: pytree, every leaf (N, ...).  Returns clipped-sum pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    N = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [l.reshape(N, -1).astype(jnp.float32) for l in leaves], axis=1)
+    out = clip_accumulate(flat, clip=clip, **kw)
+    outs, off = [], 0
+    for l in leaves:
+        size = int(l.size // N)
+        outs.append(out[off:off + size].reshape(l.shape[1:]))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, outs)

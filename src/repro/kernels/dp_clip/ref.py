@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the DP clip-accumulate kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def clip_accumulate_ref(g, clip: float):
+    """g: (N, D) -> (D,): sum_n g[n] * min(1, clip/||g[n]||)."""
+    g = g.astype(jnp.float32)
+    norms = jnp.sqrt(jnp.sum(g * g, axis=1))
+    scale = 1.0 / jnp.maximum(1.0, norms / clip)
+    return jnp.sum(g * scale[:, None], axis=0)

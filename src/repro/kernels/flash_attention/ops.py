@@ -1,0 +1,39 @@
+"""Jitted wrapper: pads to block multiples, dispatches kernel or ref.
+
+On this CPU container the kernel runs in interpret mode (slow, exact);
+production TPU runs compile the same pallas_call natively.  ``use_kernel``
+False falls back to the oracle (what the XLA dry-run lowers).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "q_block", "kv_block", "use_kernel",
+    "interpret"))
+def attend(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+           softcap: Optional[float] = None, q_block: int = 128,
+           kv_block: int = 128, use_kernel: bool = True,
+           interpret: bool = True):
+    if not use_kernel:
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+    B, S, H, hd = q.shape
+    blk = max(q_block, kv_block)
+    pad = (-S) % blk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, q_block=q_block,
+                          kv_block=kv_block, interpret=interpret)
+    return out[:, :S] if pad else out

@@ -1,0 +1,5 @@
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+from repro.kernels.ssd_scan.ops import ssd
+from repro.kernels.ssd_scan.ref import ssd_chunked, ssd_ref
+
+__all__ = ["ssd_scan_kernel", "ssd", "ssd_chunked", "ssd_ref"]

@@ -1,0 +1,96 @@
+"""Mamba-2 SSD chunked-scan Pallas kernel (TPU target).
+
+Grid = (batch, heads, S // chunk) with the chunk axis SEQUENTIAL: the
+(state_n, head_p) recurrent state lives in a VMEM scratch ref that
+persists across grid steps (TPU revisiting semantics), so the inter-chunk
+recurrence never round-trips HBM.  Per program:
+
+  * intra-chunk: build the (Q, Q) decay matrix L from the cumulative
+    dt*A, compute Y_diag = (C Bᵀ ∘ L) (dt x) with two MXU matmuls
+    (Q = 128 aligns the systolic array; n/p are 64/128-multiples),
+  * inter-chunk: Y_off = C h_prev * exp(dA_cum); then update
+    h <- h * exp(dA_sum) + (decay-weighted B)ᵀ (dt x).
+
+All accumulation in f32.  Validated in interpret mode against the
+pure-jnp oracle ``repro.models.ssm.ssd_chunked`` (re-exported in ref.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
+                chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[...].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[...].astype(jnp.float32)      # (Q,)
+    A = a_ref[...].astype(jnp.float32)        # (1,) scalar per head
+    B = b_ref[...].astype(jnp.float32)        # (Q, N)
+    C = c_ref[...].astype(jnp.float32)        # (Q, N)
+    Q = x.shape[0]
+
+    dA = dt * A[0]                             # (Q,)
+    dA_cum = jnp.cumsum(dA)                    # (Q,)
+
+    # decay matrix L[i,j] = exp(dA_cum[i] - dA_cum[j]) for j <= i
+    seg = dA_cum[:, None] - dA_cum[None, :]
+    tril = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1) <= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    L = jnp.where(tril, jnp.exp(seg), 0.0)
+
+    CB = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())))   # (Q, Q)
+    scores = CB * L * dt[None, :]
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())))  # (Q, P)
+
+    # inter-chunk: read previous state, add off-diagonal contribution
+    h_prev = h_ref[...].astype(jnp.float32)    # (N, P)
+    y = y + jnp.exp(dA_cum)[:, None] * jax.lax.dot_general(
+        C, h_prev, (((1,), (0,)), ((), ())))
+
+    # state update: h = h * exp(dA_sum) + sum_j w_j B_j x_j^T
+    w = jnp.exp(dA_cum[-1] - dA_cum) * dt      # (Q,)
+    new_state = jax.lax.dot_general(B * w[:, None], x,
+                                    (((0,), (0,)), ((), ())))  # (N, P)
+    h_ref[...] = h_prev * jnp.exp(dA_cum[-1]) + new_state
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_kernel(x, dt, A, B, C, chunk: int = 128, *,
+                    interpret: bool = True):
+    """x: (b,s,h,p); dt: (b,s,h); A: (h,); B,C: (b,s,n) -> y (b,s,h,p).
+
+    s must be a multiple of chunk (ops wrapper pads).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((None, chunk, None, p),
+                         lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((None, chunk, None),
+                         lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((None, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((None, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, chunk, None, p),
+                               lambda bi, hi, ci: (bi, ci, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)

@@ -1,0 +1,27 @@
+"""Jitted wrapper for the SSD scan kernel (pads sequence; ref fallback)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_kernel",
+                                             "interpret"))
+def ssd(x, dt, A, B, C, *, chunk: int = 128, use_kernel: bool = True,
+        interpret: bool = True):
+    if not use_kernel:
+        return ssd_ref(x, dt, A, B, C, chunk)
+    b, s, h, p = x.shape
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    y = ssd_scan_kernel(x, dt, A, B, C, chunk, interpret=interpret)
+    return y[:, :s] if pad else y

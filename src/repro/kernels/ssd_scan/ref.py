@@ -1,0 +1,10 @@
+"""Pure-jnp oracle: the chunked SSD implementation in repro.models.ssm."""
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_ref(x, dt, A, B, C, chunk: int = 128):
+    y, _ = ssd_chunked(x, dt, A, B, C, chunk)
+    return y
+
+
+__all__ = ["ssd_ref", "ssd_chunked"]

@@ -1,0 +1,270 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede any jax import: jax locks the device count on first init.
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) pair.
+
+For each pair this builds the jitted, sharding-annotated step function,
+lowers it against ShapeDtypeStruct inputs (no allocation), compiles it,
+and records memory_analysis / cost_analysis / collective bytes for the
+roofline (EXPERIMENTS.md §Dry-run, §Roofline).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b \
+        --shape train_4k [--multi-pod] [--all] [--out reports/]
+"""
+
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, RunConfig, get_config
+from repro.core import fl_step
+from repro.launch import inputs as inputs_mod
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh, n_chips
+from repro.sharding.context import (use_activation_spec,
+                                    use_param_cotangent_specs)
+from repro.sharding.specs import param_pspecs
+
+
+ACT_SPEC_MODE = os.environ.get("REPRO_ACT_SPEC", "seqpar")
+
+
+def act_spec(shape_kind: str, mesh) -> P:
+    """Batch-leading activation spec for full-sequence passes.
+
+    Inside the per-client vmap (train, multi-pod) the client axis is pinned
+    by spmd_axis_name='pod', so the inner batch pins only 'data'; prefill
+    has no client axis and uses the combined axes.
+
+    Modes (REPRO_ACT_SPEC, used by the §Perf iterations):
+      dataonly — batch over data, sequence unsharded (paper-faithful naive
+                 data parallelism; exceeds HBM on the big archs)
+      seqpar   — batch over data, sequence over model (sequence
+                 parallelism; the production default)
+      flatbatch— batch over BOTH axes (works when per-client batch is a
+                 multiple of 256; removes seq-parallel collectives)
+    """
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if shape_kind == "train":
+        if ACT_SPEC_MODE == "dataonly":
+            return P("data")
+        if ACT_SPEC_MODE == "flatbatch":
+            return P(("data", "model"))
+        return P("data", "model")
+    combined = axes if len(axes) > 1 else axes[0]
+    if ACT_SPEC_MODE == "dataonly":
+        return P(combined)
+    if ACT_SPEC_MODE == "flatbatch":
+        flat = tuple(a for a in (("pod", "data", "model"))
+                     if a in mesh.axis_names + ("model",))
+        return P(tuple(dict.fromkeys(flat)))
+    return P(combined, "model")
+
+
+def build_step(cfg, run_cfg, shape, mesh, *, unroll: bool = False):
+    """Returns (fn, example_args)."""
+    kind = shape.kind
+    spec = inputs_mod.input_specs(cfg, shape.name, mesh,
+                                  dtype=jnp.bfloat16)
+    aspec = act_spec(kind, mesh)
+    if kind == "train":
+        C = inputs_mod.n_client_shards(mesh)
+        from jax.sharding import PartitionSpec as PS
+        from repro.models import init_params as _init_params
+        gspecs = None
+        cot_specs = None
+        if os.environ.get("REPRO_GRAD_RS", "1") == "1":
+            shapes = jax.eval_shape(
+                lambda k: _init_params(cfg, k, jnp.bfloat16),
+                jax.random.PRNGKey(0))
+            gspecs = param_pspecs(mesh, shapes)
+            if "blocks" in gspecs:
+                cot_specs = jax.tree_util.tree_map(
+                    lambda sp: PS(*tuple(sp)[1:]), gspecs["blocks"])
+        raw_step = fl_step.make_train_step(
+            cfg, run_cfg, n_client_shards=C,
+            client_axis="pod" if C > 1 else None, unroll=unroll,
+            grad_pspecs=gspecs)
+
+        def step(*a, _raw=raw_step, _sp=aspec, _cs=cot_specs):
+            with use_activation_spec(_sp), use_param_cotangent_specs(_cs):
+                return _raw(*a)
+        args = (spec["params"], spec["momentum"], spec["batch"],
+                spec["eta_bar"], spec["rng"])
+        return step, args
+    if kind == "prefill":
+        raw_step = fl_step.make_prefill_step(cfg, run_cfg, unroll=unroll)
+
+        def step(*a, _raw=raw_step, _sp=aspec):
+            with use_activation_spec(_sp):
+                return _raw(*a)
+        return step, (spec["params"], spec["batch"])
+    # decode
+    step = fl_step.make_serve_step(cfg, run_cfg, seq_len=shape.seq_len,
+                                   unroll=unroll)
+    return step, (spec["params"], spec["cache"], spec["tokens"],
+                  spec["pos"])
+
+
+def analysis_variant(cfg, n_layers: int):
+    """Reduced-depth, same-width config for trip-count-exact costing."""
+    upd = {"n_layers": n_layers}
+    if cfg.family == "encdec":
+        upd["n_encoder_layers"] = n_layers
+    if cfg.global_layers:
+        upd["global_layers"] = tuple(
+            g for g in cfg.global_layers if g < n_layers) or (0,)
+    return dataclasses.replace(cfg, **upd)
+
+
+def variant_costs(cfg, run_cfg, shape, mesh, n_layers: int):
+    """(flops, bytes, coll_bytes) of an unrolled reduced-depth variant."""
+    vcfg = analysis_variant(cfg, n_layers)
+    with mesh:
+        step, args = build_step(vcfg, run_cfg, shape, mesh, unroll=True)
+        compiled = jax.jit(step).lower(*args).compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        coll = roofline.collective_bytes(compiled.as_text())
+    chips = n_chips(mesh)  # cost_analysis reports the per-device module
+    return (float(cost.get("flops", 0.0)) * chips,
+            float(cost.get("bytes accessed", 0.0)) * chips,
+            {k: v * chips for k, v in coll.items()})
+
+
+def corrected_costs(cfg, run_cfg, shape, mesh):
+    """Linear-extrapolate exact costs: cost(L) = c(P) + (L/P-1)(c(2P)-c(P)).
+
+    XLA's cost_analysis counts while-loop bodies ONCE, so the production
+    scan-over-layers executable under-reports by ~L.  Two unrolled
+    reduced-depth compiles (depth P and 2P, P = the local/global period)
+    give the exact per-layer-group delta.
+    """
+    P = cfg.local_global_period or 1
+    L = cfg.n_layers
+    f1, b1, c1 = variant_costs(cfg, run_cfg, shape, mesh, P)
+    f2, b2, c2 = variant_costs(cfg, run_cfg, shape, mesh, 2 * P)
+    groups = L // P
+    flops = f1 + (groups - 1) * (f2 - f1)
+    byts = b1 + (groups - 1) * (b2 - b1)
+    coll = {k: c1.get(k, 0) + (groups - 1) * (c2.get(k, 0) - c1.get(k, 0))
+            for k in set(c1) | set(c2)}
+    return flops, byts, coll
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
+               verbose: bool = True, with_roofline: bool = None) -> dict:
+    if with_roofline is None:
+        with_roofline = not multi_pod   # roofline table is single-pod only
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = inputs_mod.shape_is_applicable(cfg, shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "SKIP", "reason": why}
+    run_cfg = RunConfig(model=cfg, shape=shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        with mesh:
+            step, args = build_step(cfg, run_cfg, shape, mesh)
+            lowered = jax.jit(step).lower(*args)
+            compiled = lowered.compile()
+            hlo_text = compiled.as_text()
+            mem = compiled.memory_analysis()
+        if with_roofline:
+            flops, byts, coll = corrected_costs(cfg, run_cfg, shape, mesh)
+        else:
+            cost = compiled.cost_analysis()
+            if isinstance(cost, list):
+                cost = cost[0]
+            chips_ = n_chips(mesh)
+            flops = float(cost.get("flops", 0.0)) * chips_
+            byts = float(cost.get("bytes accessed", 0.0)) * chips_
+            coll = {k: v * chips_ for k, v in
+                    roofline.collective_bytes(hlo_text).items()}
+        report = roofline.RooflineReport(
+            arch=cfg.arch_id, shape=shape.name, mesh=mesh_name,
+            chips=n_chips(mesh), hlo_flops=flops, hlo_bytes=byts,
+            coll_bytes=float(sum(coll.values())),
+            coll_breakdown={k: int(v) for k, v in coll.items()},
+            model_flops_total=roofline.model_flops(
+                cfg, shape, backward=shape.kind == "train"),
+            bytes_per_device=0.0, compile_seconds=time.time() - t0)
+        result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                  "status": "OK", "roofline": report.to_dict(),
+                  "memory_analysis": {
+                      a: float(getattr(mem, a, 0) or 0)
+                      for a in ("temp_size_in_bytes",
+                                "argument_size_in_bytes",
+                                "output_size_in_bytes",
+                                "generated_code_size_in_bytes")}}
+        if verbose:
+            print(report.row(), flush=True)
+            print(f"  bytes/device: args="
+                  f"{result['memory_analysis']['argument_size_in_bytes']/1e9:.2f}GB "
+                  f"temp={result['memory_analysis']['temp_size_in_bytes']/1e9:.2f}GB "
+                  f"compile={report.compile_seconds:.1f}s", flush=True)
+        return result
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        if verbose:
+            print(f"{arch} {shape_name} {mesh_name} FAIL: {e}", flush=True)
+            traceback.print_exc()
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "FAIL", "error": str(e)[:2000],
+                "compile_seconds": time.time() - t0}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun.json")
+    args = ap.parse_args(argv)
+
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multi_pod]
+
+    results = []
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                results.append(dryrun_one(arch, shape_name,
+                                          multi_pod=multi_pod))
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    # merge with existing results (sweeps run incrementally)
+    existing = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            existing = json.load(f)
+    key = lambda r: (r["arch"], r["shape"], r["mesh"])
+    merged = {key(r): r for r in existing}
+    for r in results:
+        merged[key(r)] = r
+    with open(args.out, "w") as f:
+        json.dump(list(merged.values()), f, indent=1)
+    n_fail = sum(1 for r in results if r["status"] == "FAIL")
+    print(f"\n{len(results)} runs, {n_fail} failures -> {args.out}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

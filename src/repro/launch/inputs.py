@@ -1,0 +1,136 @@
+"""ShapeDtypeStruct input specs for every (arch x input-shape) pair.
+
+Following the shannon/kernels pattern: weak-type-correct, shardable
+stand-ins — no device allocation ever happens in the dry-run.  The
+modality frontends (whisper conv/mel, chameleon VQ) appear here as the
+stub embeddings/token streams the carve-out prescribes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.models import model as model_api
+from repro.sharding.specs import (batch_spec, cache_pspecs,
+                                  client_batch_spec, param_shardings)
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def n_client_shards(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pod", 1)
+
+
+def params_spec(cfg: ModelConfig, mesh, dtype=jnp.bfloat16
+                ) -> Tuple[Any, Any]:
+    """(params ShapeDtypeStruct tree, NamedSharding tree)."""
+    shapes = jax.eval_shape(
+        lambda k: model_api.init_params(cfg, k, dtype),
+        jax.random.PRNGKey(0))
+    shardings = param_shardings(mesh, shapes)
+    structs = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+    return structs, shardings
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                 dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Inputs for fl_step.make_train_step: (params, momentum, batch, eta, rng)."""
+    C = n_client_shards(mesh)
+    B = shape.global_batch // C
+    params, param_sh = params_spec(cfg, mesh, dtype)
+    bspec = client_batch_spec(mesh, B, extra_dims=1)
+    batch = {"tokens": jax.ShapeDtypeStruct(
+        (C, B, shape.seq_len), jnp.int32,
+        sharding=NamedSharding(mesh, bspec))}
+    if cfg.family == "encdec":
+        espec = client_batch_spec(mesh, B, extra_dims=2)
+        batch["encoder_embeds"] = jax.ShapeDtypeStruct(
+            (C, B, cfg.encoder_seq_len, cfg.d_model), dtype,
+            sharding=NamedSharding(mesh, espec))
+    rep = NamedSharding(mesh, P())
+    return {
+        "params": params,
+        "momentum": None,
+        "batch": batch,
+        "eta_bar": jax.ShapeDtypeStruct((), jnp.float32, sharding=rep),
+        "rng": jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=rep),
+        "param_shardings": param_sh,
+    }
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                   dtype=jnp.bfloat16) -> Dict[str, Any]:
+    params, param_sh = params_spec(cfg, mesh, dtype)
+    bspec = batch_spec(mesh, shape.global_batch, extra_dims=1)
+    batch = {"tokens": jax.ShapeDtypeStruct(
+        (shape.global_batch, shape.seq_len), jnp.int32,
+        sharding=NamedSharding(mesh, bspec))}
+    if cfg.family == "encdec":
+        espec = batch_spec(mesh, shape.global_batch, extra_dims=2)
+        batch["encoder_embeds"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.encoder_seq_len, cfg.d_model), dtype,
+            sharding=NamedSharding(mesh, espec))
+    return {"params": params, "batch": batch, "param_shardings": param_sh}
+
+
+def decode_cache_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """long_500k uses the windowed-ring variant (see DESIGN.md §4)."""
+    if shape.name == "long_500k" and cfg.sliding_window is not None:
+        return int(cfg.sliding_window)
+    return int(shape.seq_len)
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                  dtype=jnp.bfloat16) -> Dict[str, Any]:
+    import os
+    params, param_sh = params_spec(cfg, mesh, dtype)
+    B = shape.global_batch
+    cache_len = decode_cache_len(cfg, shape)
+    kv_dtype = jnp.int8 if os.environ.get("REPRO_KV_DTYPE") == "int8"         else dtype
+    cache_shapes = jax.eval_shape(
+        lambda: model_api.init_cache(cfg, B, cache_len, kv_dtype))
+    cache_specs = cache_pspecs(mesh, cache_shapes)
+    cache = jax.tree_util.tree_map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        cache_shapes, cache_specs)
+    bspec = batch_spec(mesh, B, extra_dims=1)
+    rep = NamedSharding(mesh, P())
+    return {
+        "params": params,
+        "cache": cache,
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                                       sharding=NamedSharding(mesh, bspec)),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32, sharding=rep),
+        "param_shardings": param_sh,
+        "cache_shardings": jax.tree_util.tree_map(
+            lambda sp: NamedSharding(mesh, sp), cache_specs),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh, *,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_inputs(cfg, shape, mesh, dtype=dtype)
+    if shape.kind == "prefill":
+        return prefill_inputs(cfg, shape, mesh, dtype=dtype)
+    return decode_inputs(cfg, shape, mesh, dtype=dtype)
+
+
+def shape_is_applicable(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    shape = INPUT_SHAPES[shape_name]
+    if shape.name == "long_500k" and not cfg.supports_long_context():
+        return False, ("pure full-attention arch: long_500k requires a "
+                       "sub-quadratic variant (see DESIGN.md §4)")
+    return True, ""

@@ -1,0 +1,170 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs   / (chips * 197e12 FLOP/s bf16)
+    memory     = HLO_bytes   / (chips * 819e9 B/s HBM)
+    collective = coll_bytes  / (chips * 50e9 B/s per ICI link)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``;
+collective bytes are parsed from the optimized HLO text (cost_analysis
+does not report them).  MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE)
+gives the useful-compute ratio that flags remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip, TPU v5e
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one 'dtype[a,b,c]' result (tuples handled by caller)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes of every collective op in (optimized) HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # lines look like:  %all-reduce.5 = f32[8,128]{1,0} all-reduce(...)
+        m = re.match(r"%?[\w.\-]+ = (.+?) (all-reduce|all-gather|"
+                     r"reduce-scatter|all-to-all|collective-permute)",
+                     stripped)
+        if not m:
+            continue
+        shape_part, op = m.group(1), m.group(2)
+        # shape_part may be a tuple "(f32[..], f32[..])"
+        out[op] += _shape_bytes(shape_part)
+    return out
+
+
+def model_flops(cfg, shape, *, backward: bool) -> float:
+    """MODEL_FLOPS = 6*N*D for train (fwd+bwd), 2*N*D for inference,
+    using active params for MoE.  D = processed tokens."""
+    n_total = cfg.param_count()
+    if cfg.n_experts:
+        # swap full expert compute for top-k + shared
+        d = cfg.d_model
+        per_layer_all = cfg.n_experts * 3 * d * cfg.moe_d_ff
+        active_frac = cfg.moe_top_k / cfg.n_experts
+        per_layer_active = per_layer_all * active_frac \
+            + cfg.n_shared_experts * 3 * d * cfg.moe_d_ff
+        n_active = n_total - cfg.n_layers * (per_layer_all
+                                             + cfg.n_shared_experts * 3 * d
+                                             * cfg.moe_d_ff) \
+            + cfg.n_layers * per_layer_active
+    else:
+        n_active = n_total
+    # the input-embedding LOOKUP does no matmul: subtract one table when
+    # untied; tied models reuse the same table for the unembed matmul
+    if not cfg.tie_embeddings:
+        n_active -= cfg.vocab_size * cfg.d_model
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * 1   # decode: one token per sequence
+    return 2.0 * n_active * tokens
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, int]
+    model_flops_total: float
+    bytes_per_device: float = 0.0
+    compile_seconds: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops_total / self.hlo_flops \
+            if self.hlo_flops else 0.0
+
+    def to_dict(self) -> Dict:
+        d = asdict(self)
+        d.update(compute_s=self.compute_s, memory_s=self.memory_s,
+                 collective_s=self.collective_s, dominant=self.dominant,
+                 useful_ratio=self.useful_ratio)
+        return d
+
+    def row(self) -> str:
+        return (f"{self.arch:18s} {self.shape:12s} {self.mesh:10s} "
+                f"compute={self.compute_s:9.3e}s mem={self.memory_s:9.3e}s "
+                f"coll={self.collective_s:9.3e}s -> {self.dominant:10s} "
+                f"useful={self.useful_ratio:6.3f}")
+
+
+def analyze(compiled, lowered_text: str, *, cfg, shape, mesh_name: str,
+            chips: int, compile_seconds: float = 0.0) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):          # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(lowered_text)
+    mem = compiled.memory_analysis()
+    bytes_per_dev = 0.0
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes"):
+        bytes_per_dev += float(getattr(mem, attr, 0.0) or 0.0)
+    return RooflineReport(
+        arch=cfg.arch_id, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts,
+        coll_bytes=float(sum(coll.values())), coll_breakdown=coll,
+        model_flops_total=model_flops(cfg, shape,
+                                      backward=shape.kind == "train"),
+        bytes_per_device=bytes_per_dev, compile_seconds=compile_seconds)

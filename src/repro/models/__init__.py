@@ -1,0 +1,5 @@
+from repro.models.model import (forward_prefill, init_cache, init_params,
+                                serve_step, train_loss)
+
+__all__ = ["forward_prefill", "init_cache", "init_params", "serve_step",
+           "train_loss"]

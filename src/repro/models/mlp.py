@@ -1,0 +1,46 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain GELU MLPs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import fan_in_init, gated_act
+
+
+def init_mlp(cfg, key, dtype, *, n_layers=None, d_ff=None):
+    L = n_layers if n_layers is not None else cfg.n_layers
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if cfg.activation in ("silu", "geglu"):
+        p = {
+            "wg": fan_in_init(ks[0], (L, d, ff), dtype),
+            "wu": fan_in_init(ks[1], (L, d, ff), dtype),
+            "wd": fan_in_init(ks[2], (L, ff, d), dtype),
+        }
+    else:  # plain gelu (whisper / grok expert style handled in moe)
+        p = {
+            "wu": fan_in_init(ks[0], (L, d, ff), dtype),
+            "wd": fan_in_init(ks[1], (L, ff, d), dtype),
+        }
+        if cfg.mlp_bias:
+            p["bu"] = jnp.zeros((L, ff), dtype)
+            p["bd"] = jnp.zeros((L, d), dtype)
+    return p
+
+
+def apply_mlp(cfg, lp, x):
+    """lp holds one layer's slices (no leading L axis)."""
+    if "wg" in lp:
+        gate = jnp.einsum("bsd,df->bsf", x, lp["wg"])
+        up = jnp.einsum("bsd,df->bsf", x, lp["wu"])
+        h = gated_act(cfg.activation, gate, up)
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, lp["wu"])
+        if "bu" in lp:
+            h = h + lp["bu"]
+        h = jax.nn.gelu(h, approximate=True)
+    out = jnp.einsum("bsf,fd->bsd", h, lp["wd"])
+    if "bd" in lp:
+        out = out + lp["bd"]
+    return out

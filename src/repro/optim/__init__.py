@@ -1,0 +1,3 @@
+from repro.optim.sgd import SGD, AdamState, AdamW, SGDState
+
+__all__ = ["SGD", "AdamState", "AdamW", "SGDState"]

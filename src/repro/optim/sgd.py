@@ -1,0 +1,92 @@
+"""Optimizers (pure JAX pytree transforms; no optax dependency).
+
+The paper's server update is plain SGD with round step sizes; momentum and
+AdamW are provided for the non-convex architectures (§C.3 regime).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    momentum: Optional[Any]
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+@dataclass(frozen=True)
+class SGD:
+    momentum: float = 0.0
+    nesterov: bool = False
+
+    def init(self, params) -> SGDState:
+        if self.momentum == 0.0:
+            return SGDState(momentum=None)
+        return SGDState(momentum=jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(self, grads, state: SGDState, params, lr
+               ) -> Tuple[Any, SGDState]:
+        if state.momentum is None:
+            new_params = jax.tree_util.tree_map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new_params, state
+        m = jax.tree_util.tree_map(
+            lambda mm, g: self.momentum * mm + g.astype(jnp.float32),
+            state.momentum, grads)
+        upd = m
+        if self.nesterov:
+            upd = jax.tree_util.tree_map(
+                lambda mm, g: self.momentum * mm + g.astype(jnp.float32),
+                m, grads)
+        new_params = jax.tree_util.tree_map(
+            lambda p, u: (p.astype(jnp.float32) - lr * u).astype(p.dtype),
+            params, upd)
+        return new_params, SGDState(momentum=m)
+
+
+@dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params) -> AdamState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+            count=jnp.zeros((), jnp.int32))
+
+    def update(self, grads, state: AdamState, params, lr
+               ) -> Tuple[Any, AdamState]:
+        count = state.count + 1
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: self.b1 * m + (1 - self.b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: self.b2 * v
+            + (1 - self.b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+
+        def upd(p, m, v):
+            step = (m / b1c) / (jnp.sqrt(v / b2c) + self.eps)
+            if self.weight_decay:
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new_params, AdamState(mu=mu, nu=nu, count=count)

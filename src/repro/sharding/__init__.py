@@ -1,0 +1,6 @@
+from repro.sharding.specs import (batch_spec, cache_pspecs,
+                                  client_batch_spec, param_pspecs,
+                                  param_shardings)
+
+__all__ = ["batch_spec", "cache_pspecs", "client_batch_spec",
+           "param_pspecs", "param_shardings"]

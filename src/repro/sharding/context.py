@@ -1,0 +1,143 @@
+"""Activation-sharding constraint context.
+
+GSPMD left to itself may shard activations on d_model and replicate the
+batch (observed on the 16x16 mesh: 17 GB score buffers).  Model code calls
+:func:`constrain` on (B, S, d)-shaped residuals; when a spec is installed
+(by the launcher, under ``with mesh:``), a ``with_sharding_constraint``
+pins the batch dimension to the data axes.  Outside the launcher (CPU
+tests) it is a no-op, keeping the model code mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Any, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACTIVATION_SPEC: Optional[P] = None
+_PARAM_COT_SPECS: Optional[Any] = None   # blocks-tree of per-layer specs
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _with_cotangent_sharding(x, spec):
+    return x
+
+
+def _wcs_fwd(x, spec):
+    return x, None
+
+
+def _wcs_bwd(spec, _res, g):
+    return (jax.lax.with_sharding_constraint(g, spec),)
+
+
+_with_cotangent_sharding.defvjp(_wcs_fwd, _wcs_bwd)
+
+
+@contextlib.contextmanager
+def use_param_cotangent_specs(specs):
+    """Install per-layer parameter-slice specs (leading L dim dropped).
+
+    Inside the backward of the layer scan, XLA otherwise reduces each
+    layer's weight gradient with a full all-reduce (replicated result)
+    before slicing — pinning the cotangent sharding turns that into a
+    reduce-scatter (grok-1 train_4k: 305 TB -> see EXPERIMENTS.md §Perf).
+    """
+    global _PARAM_COT_SPECS
+    prev = _PARAM_COT_SPECS
+    _PARAM_COT_SPECS = specs
+    try:
+        yield
+    finally:
+        _PARAM_COT_SPECS = prev
+
+
+def shard_layer_param_cotangents(lp):
+    """Apply cotangent-sharding to one layer's param slices (no-op unless
+    specs installed by the launcher)."""
+    if _PARAM_COT_SPECS is None:
+        return lp
+    return jax.tree_util.tree_map(
+        lambda a, sp: _with_cotangent_sharding(a, sp), lp,
+        _PARAM_COT_SPECS)
+
+
+@contextlib.contextmanager
+def use_activation_spec(spec: Optional[P]):
+    global _ACTIVATION_SPEC
+    prev = _ACTIVATION_SPEC
+    _ACTIVATION_SPEC = spec
+    try:
+        yield
+    finally:
+        _ACTIVATION_SPEC = prev
+
+
+def constrain(x):
+    """Pin an activation whose FIRST axis is the (per-client) batch."""
+    if _ACTIVATION_SPEC is None:
+        return x
+    spec = _ACTIVATION_SPEC
+    extra = x.ndim - len(spec)
+    if extra > 0:
+        spec = P(*(tuple(spec) + (None,) * extra))
+    elif extra < 0:
+        spec = P(*tuple(spec)[:x.ndim])
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_tokens(x, dim: int = 0):
+    """Pin a flattened-token dimension to ALL activation axes combined.
+
+    Used for MoE dispatch/combine buffers whose leading dim is B*S (or
+    expert-slot rows E*C): shards rows over ('data','model') jointly.
+    """
+    if _ACTIVATION_SPEC is None:
+        return x
+    axes = tuple(a for a in tuple(_ACTIVATION_SPEC) if a is not None)
+    flat = []
+    for a in axes:
+        if isinstance(a, (tuple, list)):
+            flat.extend(a)
+        else:
+            flat.append(a)
+    if not flat:
+        return x
+    entry = tuple(flat) if len(flat) > 1 else flat[0]
+    spec = [None] * x.ndim
+    spec[dim] = entry
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def batch_model_axes():
+    """(batch_axis_entry, model_axis_entry) from the installed spec."""
+    if _ACTIVATION_SPEC is None:
+        return None, None
+    t = tuple(_ACTIVATION_SPEC)
+    b = t[0] if len(t) > 0 else None
+    m = t[1] if len(t) > 1 else None
+    return b, m
+
+
+def constrain_expert(x, *, last_is_ff: bool):
+    """Pin MoE expert-region tensors (B, M, E, Cg, d|ff).
+
+    The sequence-block axis M is UNSHARDED here — the model axis moves to
+    the expert hidden dim instead, so expert weights keep their
+    tensor-parallel sharding instead of being fully gathered (observed
+    6.4 GB/layer f32 weight gathers on grok otherwise).
+    """
+    if _ACTIVATION_SPEC is None:
+        return x
+    b, m = batch_model_axes()
+    spec = [None] * x.ndim
+    spec[0] = b
+    if last_is_ff:
+        spec[-1] = m
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def activation_spec() -> Optional[P]:
+    return _ACTIVATION_SPEC

@@ -1,0 +1,56 @@
+"""Hierarchical aggregator tree (Supp. A) — correctness + accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregators import Aggregator, build_tree, \
+    tree_message_counts
+from repro.core.protocol import Server, UpdateMsg
+
+
+def test_aggregator_sums_children():
+    agg = Aggregator(0, [0, 1, 2])
+    U = lambda v: {"w": jnp.full((4,), float(v))}
+    assert agg.receive(UpdateMsg(0, 0, U(1))) is None
+    assert agg.receive(UpdateMsg(0, 1, U(2))) is None
+    out = agg.receive(UpdateMsg(0, 2, U(3)))
+    assert out is not None
+    np.testing.assert_allclose(np.asarray(out.U["w"]), 6.0)
+
+
+def test_aggregator_interleaved_rounds():
+    agg = Aggregator(0, [0, 1])
+    U = lambda v: {"w": jnp.asarray([float(v)])}
+    assert agg.receive(UpdateMsg(0, 0, U(1))) is None
+    assert agg.receive(UpdateMsg(1, 0, U(10))) is None   # round 1 early
+    out0 = agg.receive(UpdateMsg(0, 1, U(2)))
+    assert out0.round_idx == 0
+    out1 = agg.receive(UpdateMsg(1, 1, U(20)))
+    assert out1.round_idx == 1
+    np.testing.assert_allclose(np.asarray(out1.U["w"]), 30.0)
+
+
+def test_tree_equivalent_to_flat_server():
+    """server(client msgs) == server(aggregated msgs), same global model."""
+    n = 4
+    w0 = {"w": jnp.zeros((3,))}
+    flat = Server(dict(w0), n_clients=n, round_stepsizes=[0.1])
+    tree_srv = Server(dict(w0), n_clients=2, round_stepsizes=[0.1])
+    aggs = build_tree(n, fan_in=2)
+    key = jax.random.PRNGKey(0)
+    Us = [{"w": jax.random.normal(jax.random.fold_in(key, c), (3,))}
+          for c in range(n)]
+    for c in range(n):
+        flat.receive(UpdateMsg(0, c, Us[c]))
+        up = aggs[c // 2].receive(UpdateMsg(0, c, Us[c]))
+        if up is not None:
+            tree_srv.receive(up)
+    np.testing.assert_allclose(np.asarray(flat.v["w"]),
+                               np.asarray(tree_srv.v["w"]), rtol=1e-6)
+    assert flat.k == tree_srv.k == 1
+
+
+def test_message_accounting():
+    mc = tree_message_counts(n_clients=100, fan_in=10, T=195)
+    assert mc["aggregator_to_server"] == 10 * 195
+    assert mc["server_inbound_reduction"] == 10.0

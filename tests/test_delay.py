@@ -1,0 +1,29 @@
+"""Permissible delay functions: monotonicity requirements."""
+from repro.core import ConstantDelay, SqrtDelay, Theorem5Delay
+from repro.core.delay import t_minus_tau_increasing
+
+
+def test_theorem5_delay_t_minus_tau_increasing():
+    for m, d in [(0, 1), (100, 1), (2900, 2)]:
+        tau = Theorem5Delay(m=m, d=d)
+        assert t_minus_tau_increasing(tau, 100_000)
+
+
+def test_sqrt_delay_increasing_and_admissible():
+    tau = SqrtDelay(c=1.0)
+    assert t_minus_tau_increasing(tau, 100_000)
+    # tau(t) <= sqrt(t/ln t) asymptotically
+    import math
+    for t in (1000, 10_000, 100_000):
+        assert tau(t) <= math.sqrt(t / math.log(t)) + 1e-9
+
+
+def test_constant_delay():
+    tau = ConstantDelay(tau0=42.0)
+    assert tau(0) == 42.0 and tau(10**6) == 42.0
+    assert t_minus_tau_increasing(tau, 10_000)
+
+
+def test_theorem5_M1_dominates_d():
+    tau = Theorem5Delay(m=0, d=3)
+    assert tau.M1 >= 4  # >= d+1

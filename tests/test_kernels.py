@@ -1,0 +1,135 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.dp_clip import (clip_accumulate, clip_accumulate_ref,
+                                   clip_accumulate_tree)
+from repro.kernels.flash_attention import attend, attention_ref
+from repro.kernels.ssd_scan import ssd, ssd_ref
+
+
+# --- flash attention -------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (2, 256, 4, 2, 64),
+    (1, 128, 2, 1, 128),     # MQA
+    (2, 384, 8, 8, 32),      # MHA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes_dtypes(B, S, H, KV, hd, dtype):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd)).astype(dtype)
+    out = attend(q, k, v, q_block=128, kv_block=128)
+    ref = attention_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [64, 128])
+def test_flash_attention_sliding_window(window):
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (1, 256, 4, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 256, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 256, 2, 64))
+    out = attend(q, k, v, window=window)
+    ref = attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_softcap():
+    key = jax.random.PRNGKey(2)
+    q = 3.0 * jax.random.normal(key, (1, 128, 2, 64))
+    k = 3.0 * jax.random.normal(jax.random.fold_in(key, 1), (1, 128, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 128, 2, 64))
+    out = attend(q, k, v, softcap=30.0)
+    ref = attention_ref(q, k, v, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_pads_odd_seq():
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 200, 2, 64))   # not a block multiple
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 200, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 200, 2, 64))
+    out = attend(q, k, v)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --- dp clip ----------------------------------------------------------------
+
+@pytest.mark.parametrize("N,D,clip", [
+    (8, 512, 0.5), (16, 1024, 1.0), (32, 2048, 0.1), (4, 300, 2.0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dp_clip_sweep(N, D, clip, dtype):
+    g = (jax.random.normal(jax.random.PRNGKey(0), (N, D)) * 3.0) \
+        .astype(dtype)
+    out = clip_accumulate(g, clip=clip)
+    ref = clip_accumulate_ref(g, clip)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=5e-3 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-3 if dtype == jnp.bfloat16 else 1e-6)
+
+
+def test_dp_clip_tree_roundtrip():
+    key = jax.random.PRNGKey(1)
+    grads = {"w1": jax.random.normal(key, (8, 16, 16)),
+             "b1": jax.random.normal(jax.random.fold_in(key, 1), (8, 16))}
+    out = clip_accumulate_tree(grads, clip=0.7)
+    # oracle via flattening
+    flat = jnp.concatenate([grads["w1"].reshape(8, -1),
+                            grads["b1"].reshape(8, -1)], axis=1)
+    ref = clip_accumulate_ref(flat, 0.7)
+    np.testing.assert_allclose(np.asarray(out["w1"]).ravel(),
+                               np.asarray(ref[:256]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out["b1"]).ravel(),
+                               np.asarray(ref[256:]), rtol=1e-5)
+
+
+# --- ssd scan ----------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 256, 4, 32, 16, 64),
+    (1, 128, 2, 64, 32, 128),
+    (2, 192, 3, 32, 64, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_sweep(b, s, h, p, n, chunk, dtype):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(0.1 * jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    out = ssd(x, dt, A, B, C, chunk=chunk)
+    ref = ssd_ref(x, dt, A, B, C, chunk)
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-9
+    rel = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - ref.astype(jnp.float32)))) / scale
+    assert rel < (1e-5 if dtype == jnp.float32 else 3e-2)
+
+
+def test_ssd_pads_odd_seq():
+    key = jax.random.PRNGKey(1)
+    b, s, h, p, n = 1, 100, 2, 32, 16
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(0.1 * jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    out = ssd(x, dt, A, B, C, chunk=64)
+    ref = ssd_ref(x, dt, A, B, C, 64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)

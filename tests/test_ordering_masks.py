@@ -1,0 +1,70 @@
+"""Theorem 1's ρ map (B.1) and the C.1 mask recursion."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.masks import (apply_masked_update, expectation_check,
+                              make_partition, mask_for_group,
+                              masked_update_nbytes)
+from repro.core.ordering import (client_sizes, is_bijection,
+                                 make_assignment, rho, rho_inverse)
+
+
+@given(seed=st.integers(0, 50), n_clients=st.integers(1, 5),
+       n_rounds=st.integers(1, 6))
+@settings(max_examples=25, deadline=None)
+def test_rho_is_bijection(seed, n_clients, n_rounds):
+    sizes = [3 + 2 * i for i in range(n_rounds)]
+    p = [1.0 / n_clients] * n_clients
+    a = make_assignment(sizes, p, seed=seed)
+    assert is_bijection(a, n_clients)
+
+
+def test_rho_inverse_roundtrip():
+    a = make_assignment([5, 8, 11], [0.5, 0.5], seed=3)
+    total = 5 + 8 + 11
+    for t in range(total):
+        c, i, h = rho_inverse(a, t)
+        assert rho(a, c, i, h) == t
+
+
+def test_client_sizes_sum_to_round_sizes():
+    sizes = [10, 20, 30]
+    a = make_assignment(sizes, [0.3, 0.7], seed=0)
+    per = client_sizes(a, 2)
+    for i, s in enumerate(sizes):
+        assert per[0][i] + per[1][i] == s
+
+
+def test_partition_balanced_and_complete():
+    params = {"w": jnp.zeros((13, 7)), "b": jnp.zeros((5,))}
+    D = 4
+    part = make_partition(params, D, seed=0)
+    for leaf in jax.tree_util.tree_leaves(part):
+        assert int(leaf.min()) >= 0 and int(leaf.max()) < D
+    # every coordinate in exactly one group
+    total = sum(int(jnp.sum(mask_for_group(part, u)["w"]))
+                for u in range(D))
+    assert total == 13 * 7
+
+
+def test_masked_update_unbiased():
+    """Equation (10): d_ξ E[S_u] = I  =>  E_u[masked update] == grad."""
+    key = jax.random.PRNGKey(0)
+    grad = {"w": jax.random.normal(key, (32, 8)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (8,))}
+    D = 4
+    part = make_partition(grad, D, seed=1)
+    recon = expectation_check(grad, part, D)
+    np.testing.assert_allclose(np.asarray(recon["w"]),
+                               np.asarray(grad["w"]), rtol=1e-5)
+
+
+def test_masked_update_reduces_communication():
+    grad = {"w": jnp.ones((1000,), jnp.float32)}
+    D = 10
+    part = make_partition(grad, D, seed=0)
+    upd = apply_masked_update(grad, part, 0, D)
+    nbytes = masked_update_nbytes(upd, part, 0)
+    assert nbytes == 100 * 4          # 1/D of the dense 4000 bytes

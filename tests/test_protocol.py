@@ -1,0 +1,148 @@
+"""Protocol state machines + the async simulator (Theorem 1 regime)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AsyncFLSimulator, Client, LogRegTask, Server,
+                        UpdateMsg)
+from repro.data import make_binary_dataset
+
+
+def _tiny_task(n=200, d=8, seed=0):
+    X, y = make_binary_dataset(n, d, seed=seed)
+    return LogRegTask(X, y, l2=1.0 / n)
+
+
+def test_server_broadcasts_only_when_round_complete():
+    task = _tiny_task()
+    w0 = task.init_model()
+    srv = Server(w0, n_clients=3, round_stepsizes=[0.1, 0.1])
+    U = task.zero_update()
+    assert srv.receive(UpdateMsg(0, 0, U)) is None
+    assert srv.receive(UpdateMsg(0, 1, U)) is None
+    b = srv.receive(UpdateMsg(0, 2, U))
+    assert b is not None and b.k == 1
+
+
+def test_server_handles_out_of_order_rounds():
+    """A round-1 update may arrive before round 0 completes (async)."""
+    task = _tiny_task()
+    w0 = task.init_model()
+    srv = Server(w0, n_clients=2, round_stepsizes=[0.1] * 4)
+    U = task.zero_update()
+    assert srv.receive(UpdateMsg(0, 0, U)) is None
+    assert srv.receive(UpdateMsg(1, 0, U)) is None   # client 0 ahead
+    b = srv.receive(UpdateMsg(0, 1, U))              # round 0 now complete
+    assert b is not None and b.k == 1
+    b = srv.receive(UpdateMsg(1, 1, U))              # round 1 complete
+    assert b is not None and b.k == 2
+
+
+def test_server_applies_updates_with_round_stepsize():
+    task = _tiny_task()
+    w0 = task.init_model()
+    srv = Server(w0, n_clients=1, round_stepsizes=[0.5, 0.25])
+    U = {"w": jnp.ones(8), "b": jnp.float32(2.0)}
+    srv.receive(UpdateMsg(0, 0, U))
+    np.testing.assert_allclose(np.asarray(srv.v["w"]),
+                               np.asarray(w0["w"]) - 0.5, rtol=1e-6)
+    srv.receive(UpdateMsg(1, 0, U))
+    np.testing.assert_allclose(np.asarray(srv.v["b"]),
+                               np.asarray(w0["b"]) - 0.5 * 2 - 0.25 * 2,
+                               rtol=1e-6)
+
+
+def test_client_gate_blocks_d_rounds_ahead():
+    task = _tiny_task()
+    w0 = task.init_model()
+    cl = Client(0, w0, task, sizes=[4, 4, 4, 4],
+                round_stepsizes=[0.1] * 4, d=1, seed=0)
+    assert not cl.blocked          # i=0, k=0, d=1
+    cl.run(4)
+    cl.finish_round()              # i=1
+    assert cl.blocked              # i == k + d
+    from repro.core import BroadcastMsg
+    cl.isr_receive(BroadcastMsg(v=w0, k=1))
+    assert not cl.blocked
+
+
+def test_client_isr_ignores_stale_broadcasts():
+    task = _tiny_task()
+    w0 = task.init_model()
+    cl = Client(0, w0, task, sizes=[2] * 4, round_stepsizes=[0.1] * 4,
+                d=2, seed=0)
+    from repro.core import BroadcastMsg
+    cl.isr_receive(BroadcastMsg(v=w0, k=2))
+    assert cl.k == 2
+    stale = jax.tree_util.tree_map(lambda a: a + 99.0, w0)
+    cl.isr_receive(BroadcastMsg(v=stale, k=1))   # stale: ignored
+    assert cl.k == 2
+    assert float(jnp.max(jnp.abs(cl.w["w"] - w0["w"]))) < 50.0
+
+
+def test_client_isr_subtracts_own_partial_round():
+    """ISRRECEIVE: w = v - eta_i * U (paper Algorithm 4 line 5)."""
+    task = _tiny_task()
+    w0 = task.init_model()
+    cl = Client(0, w0, task, sizes=[8] * 3, round_stepsizes=[0.3] * 3,
+                d=2, seed=0)
+    cl.run(4)   # mid-round: U nonzero
+    U_before = jax.tree_util.tree_map(lambda a: a.copy(), cl.U)
+    from repro.core import BroadcastMsg
+    v = jax.tree_util.tree_map(lambda a: a * 0.0, w0)
+    cl.isr_receive(BroadcastMsg(v=v, k=1))
+    expect = jax.tree_util.tree_map(lambda vv, u: vv - 0.3 * u, v, U_before)
+    np.testing.assert_allclose(np.asarray(cl.w["w"]),
+                               np.asarray(expect["w"]), rtol=1e-5)
+
+
+@pytest.mark.parametrize("d", [1, 2])
+def test_simulator_invariant_i_minus_k_bounded(d):
+    task = _tiny_task()
+    sizes = [[4 + i for i in range(12)]] * 3
+    etas = [0.05] * 12
+    sim = AsyncFLSimulator(task, n_clients=3, sizes_per_client=sizes,
+                           round_stepsizes=etas, d=d, seed=1,
+                           speeds=[1.0, 0.5, 2.0],
+                           latency_fn=lambda r: 0.01 + 0.2 * r.random())
+    max_gap = 0
+
+    orig = sim._on_round_complete
+    def watched(ev):
+        orig(ev)
+        nonlocal max_gap
+        for cl in sim.clients:
+            max_gap = max(max_gap, cl.i - cl.k)
+    sim._on_round_complete = watched
+    sim.run(max_rounds=10)
+    assert max_gap <= d
+    assert sim.server.k >= 10
+
+
+def test_simulator_messages_equal_rounds_times_clients():
+    task = _tiny_task()
+    sim = AsyncFLSimulator(task, n_clients=4,
+                           sizes_per_client=[[3] * 6] * 4,
+                           round_stepsizes=[0.05] * 6, d=1, seed=0)
+    res = sim.run(max_rounds=6)
+    # every client sends exactly one U per round
+    assert res["final"]["messages"] >= 6 * 4
+    assert res["final"]["broadcasts"] == 6
+
+
+def test_simulator_converges_on_logreg():
+    from repro.data import make_binary_dataset
+    from repro.configs.base import SampleSequenceConfig, StepSizeConfig
+    from repro.core import round_stepsizes, rounds_for_budget
+    X, y = make_binary_dataset(1000, 10, seed=3, noise=0.2)
+    task = LogRegTask(X, y, l2=1e-3)
+    sizes = rounds_for_budget(
+        SampleSequenceConfig(kind="linear", s0=50, a=50.0), 10_000)
+    etas = round_stepsizes(
+        StepSizeConfig(kind="inv_t", eta0=0.1, beta=0.001), sizes)
+    per_client = [[max(1, s // 4) for s in sizes]] * 4
+    sim = AsyncFLSimulator(task, n_clients=4, sizes_per_client=per_client,
+                           round_stepsizes=etas, d=1, seed=0)
+    res = sim.run(max_rounds=len(sizes))
+    assert res["final"]["accuracy"] > 0.9

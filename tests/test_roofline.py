@@ -1,0 +1,58 @@
+"""Roofline extraction: HLO collective parsing + model FLOP accounting."""
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.roofline import (RooflineReport, collective_bytes,
+                                   model_flops)
+
+
+HLO = """
+ENTRY %main {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %all-reduce.5 = f32[16,128]{1,0} all-reduce(%p0), replica_groups={}
+  %ag = bf16[256,64]{1,0} all-gather(%p0), dimensions={0}
+  %t = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-to-all(%p0, %p0)
+  %cp = u32[100]{0} collective-permute(%p0)
+  %noise = f32[999]{0} add(%p0, %p0)
+}
+"""
+
+
+def test_collective_bytes_parses_ops_and_tuples():
+    out = collective_bytes(HLO)
+    assert out["all-reduce"] == 16 * 128 * 4
+    assert out["all-gather"] == 256 * 64 * 2
+    assert out["all-to-all"] == 2 * 8 * 8 * 4
+    assert out["collective-permute"] == 100 * 4
+    assert out["reduce-scatter"] == 0
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("gemma-2b")
+    tr = model_flops(cfg, INPUT_SHAPES["train_4k"], backward=True)
+    de = model_flops(cfg, INPUT_SHAPES["decode_32k"], backward=False)
+    # train: 6*N*B*S tokens;  decode: 2*N*B tokens
+    assert tr > de * 1000
+    n = cfg.param_count()
+    assert abs(tr - 6.0 * n * 256 * 4096) / tr < 0.01  # tied: no subtraction
+
+
+def test_model_flops_moe_uses_active_params():
+    moe = get_config("qwen2-moe-a2.7b")
+    full_equiv = 6.0 * moe.param_count() * 256 * 4096
+    active = model_flops(moe, INPUT_SHAPES["train_4k"], backward=True)
+    assert active < 0.5 * full_equiv     # top-4 of 60 experts
+
+
+def test_roofline_report_terms_and_dominant():
+    r = RooflineReport(
+        arch="x", shape="train_4k", mesh="16x16", chips=256,
+        hlo_flops=256 * 197e12 * 2.0,          # => compute 2 s
+        hlo_bytes=256 * 819e9 * 5.0,           # => memory 5 s
+        coll_bytes=256 * 50e9 * 1.0,           # => collective 1 s
+        coll_breakdown={}, model_flops_total=256 * 197e12)
+    assert abs(r.compute_s - 2.0) < 1e-9
+    assert abs(r.memory_s - 5.0) < 1e-9
+    assert abs(r.collective_s - 1.0) < 1e-9
+    assert r.dominant == "memory"
+    assert abs(r.useful_ratio - 0.5) < 1e-9

@@ -1,0 +1,112 @@
+"""Sample-size sequences: recipes, condition (3), T ~ sqrt(K)."""
+import math
+
+import pytest
+
+from repro.configs.base import SampleSequenceConfig
+from repro.core import (ConstantDelay, SqrtDelay, Theorem5Delay,
+                        communication_rounds_vs_constant, lemma1_sequence,
+                        rounds_for_budget, sample_sizes,
+                        satisfies_condition3)
+from repro.core.sequences import cumulative
+
+
+def test_constant_sequence():
+    cfg = SampleSequenceConfig(kind="constant", s0=16)
+    assert sample_sizes(cfg, 5) == [16] * 5
+
+
+def test_linear_sequence_increasing():
+    cfg = SampleSequenceConfig(kind="linear", s0=50, a=50.0)
+    s = sample_sizes(cfg, 10)
+    assert s[0] == 50
+    assert all(b > a for a, b in zip(s, s[1:]))
+
+
+def test_power_sequence_matches_paper_example3():
+    # s_{i,c} = ceil(N_c q (i+m)) = 16 + ~1.32 i   (paper Example 3)
+    cfg = SampleSequenceConfig(kind="power", p=1.0,
+                               q=0.00013216327772100012,
+                               m=12.106237281566509, N_c=10_000)
+    s = sample_sizes(cfg, 4)
+    assert s[0] == 17 or s[0] == 16   # ceil rounding
+    diffs = [b - a for a, b in zip(s, s[1:])]
+    assert all(1 <= d <= 2 for d in diffs)   # slope 1.32
+
+
+def test_ilog_sequence_theta_i_over_log():
+    cfg = SampleSequenceConfig(kind="ilog", s0=1, m=2900, d=0)
+    s = sample_sizes(cfg, 2000)
+    assert s[-1] > s[0]
+    i = 1999
+    z = cfg.m + i + 1
+    expected = z / (16 * math.log(z / 2))
+    assert abs(s[i] - expected) <= 1.0 + expected * 0.01
+
+
+def test_rounds_for_budget_covers_K():
+    cfg = SampleSequenceConfig(kind="linear", s0=50, a=50.0)
+    K = 20_000
+    sizes = rounds_for_budget(cfg, K)
+    assert sum(sizes) >= K
+    assert sum(sizes[:-1]) < K
+
+
+def test_T_scales_like_sqrt_K():
+    """The headline claim: T ~ sqrt(K) for linear sample-size growth."""
+    cfg = SampleSequenceConfig(kind="linear", s0=1, a=1.0)
+    t1 = len(rounds_for_budget(cfg, 10_000))
+    t4 = len(rounds_for_budget(cfg, 40_000))
+    ratio = t4 / t1
+    assert 1.8 < ratio < 2.2    # 4x budget => ~2x rounds
+
+
+def test_communication_reduction_report():
+    cfg = SampleSequenceConfig(kind="linear", s0=16, a=1.322)
+    rep = communication_rounds_vs_constant(cfg, 25_000)
+    assert rep["T_constant"] == math.ceil(25_000 / 16)
+    assert rep["reduction"] > 4.0
+
+
+def test_lemma1_sequence_satisfies_condition3():
+    d = 1
+    m = 0
+    seq = lemma1_sequence(400, g=2.0, m=m, d=d)
+    tau = Theorem5Delay(m=m, d=d)
+    assert satisfies_condition3(seq, tau, d)
+
+
+def test_theorem5_ilog_respects_its_delay():
+    d = 1
+    m = 2 * (d + 1) * 1450      # paper: s_0 = 50 example
+    cfg = SampleSequenceConfig(kind="ilog", s0=50, m=m, d=d)
+    sizes = sample_sizes(cfg, 300)
+    tau = Theorem5Delay(m=m, d=d)
+    assert satisfies_condition3(sizes, tau, d)
+
+
+def test_condition3_fails_for_too_aggressive_growth():
+    # doubling sizes grow much faster than tau ~ sqrt => must violate (3)
+    sizes = [2 ** i for i in range(1, 25)]
+    tau = SqrtDelay(c=1.0)
+    assert not satisfies_condition3(sizes, tau, 1)
+
+
+def test_constant_delay_allows_bounded_sizes():
+    sizes = [10] * 100
+    tau = ConstantDelay(tau0=25.0)
+    assert satisfies_condition3(sizes, tau, 1)     # 2 rounds * 10 <= 25
+    assert not satisfies_condition3(sizes, tau, 4) # 5 rounds * 10 > 25
+
+
+def test_cumulative():
+    assert cumulative([1, 2, 3]) == [1, 3, 6]
+
+
+def test_constant_stepsize_max_sample_size():
+    """C.2.1: s <= 1/(eta mu (d+1)) keeps tau within the delay bound."""
+    from repro.core.sequences import max_constant_sample_size
+    s = max_constant_sample_size(eta=0.01, mu=0.1, d=1)
+    assert s == 500
+    assert (1 + 1) * s <= 1.0 / (0.01 * 0.1) + 1e-9
+    assert max_constant_sample_size(10.0, 10.0, 10) == 1  # floor at 1

@@ -1,0 +1,60 @@
+"""Step-size schedules and the Lemma-2 round transform."""
+import math
+
+from repro.configs.base import SampleSequenceConfig, StepSizeConfig
+from repro.core import (eta_t, per_iteration_stepsizes, round_stepsizes,
+                        sample_sizes, theorem5_round_stepsizes)
+
+
+def test_eta_schemes():
+    c = StepSizeConfig(kind="constant", eta0=0.1)
+    assert eta_t(c, 1000) == 0.1
+    it = StepSizeConfig(kind="inv_t", eta0=0.1, beta=0.001)
+    assert abs(eta_t(it, 1000) - 0.1 / 2.0) < 1e-12
+    sq = StepSizeConfig(kind="inv_sqrt", eta0=0.1, beta=0.01)
+    assert abs(eta_t(sq, 10_000) - 0.1 / 2.0) < 1e-12
+
+
+def test_round_transform_freezes_eta_within_round():
+    sizes = [10, 20, 30]
+    cfg = StepSizeConfig(kind="inv_t", eta0=0.1, beta=0.1)
+    etas = round_stepsizes(cfg, sizes)
+    assert etas[0] == eta_t(cfg, 0)
+    assert etas[1] == eta_t(cfg, 10)
+    assert etas[2] == eta_t(cfg, 30)
+    assert etas[0] > etas[1] > etas[2]
+
+
+def test_per_iteration_vs_round():
+    sizes = [5, 5]
+    cfg = StepSizeConfig(kind="inv_t", eta0=0.1, beta=0.01)
+    per = per_iteration_stepsizes(cfg, sizes)
+    rnd = round_stepsizes(cfg, sizes)
+    assert per[0][0] == rnd[0]
+    assert per[1][0] == rnd[1]
+    assert per[0][-1] < per[0][0]  # diminishing within a round
+
+
+def test_theorem5_round_stepsizes_O_logi_over_i2():
+    mu = 1.0
+    seq_cfg = SampleSequenceConfig(kind="ilog", s0=1, m=100, d=1)
+    sizes = sample_sizes(seq_cfg, 500)
+    etas = theorem5_round_stepsizes(mu, sizes, m=100, d=1)
+    assert all(b <= a for a, b in zip(etas, etas[1:]))
+    # eta_bar_i ~ 12/(mu * t(i)): check against the closed form loosely
+    cum = sum(sizes[:400])
+    assert etas[400] < 12.0 / (mu * cum) * 1.1
+
+
+def test_lemma2_bound_eta_ratio():
+    """Lemma 2: alpha_t within [a0, 3 a0] <=> round eta within 3x of eta_t."""
+    seq_cfg = SampleSequenceConfig(kind="ilog", s0=1, m=100, d=1)
+    sizes = sample_sizes(seq_cfg, 200)
+    cfg = StepSizeConfig(kind="inv_t", eta0=1.0, beta=1.0)
+    etas = round_stepsizes(cfg, sizes)
+    cum = 0
+    for i, s in enumerate(sizes):
+        for h in range(s):
+            ratio = etas[i] / eta_t(cfg, cum + h)
+            assert 1.0 <= ratio <= 3.01
+        cum += s
