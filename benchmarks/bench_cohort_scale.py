@@ -1,0 +1,79 @@
+"""Cohort vs event engine throughput at C in {64, 512, 4096}.
+
+Derived metric: client-rounds/sec per engine and the cohort speedup.
+Both engines run the identical workload (same task, sizes, step sizes,
+d=1), selected through ``make_simulator(FLConfig(engine=...), ...)``.
+jit caches live on the task objects — the event engine's per-chunk fns
+on the LogRegTask, the cohort engine's block fns on the CohortLogRegTask
+— so each engine is warmed by one run and timed on a fresh simulator
+that reuses the warm task: the event engine at small C (its per-chunk
+jits are population-independent), the cohort engine at full C (its
+vmapped block fns compile per population size).
+
+Also writes ``BENCH_cohort.json`` (cwd) with the raw numbers.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from repro.cohort import make_simulator
+from repro.configs.base import FLConfig
+from repro.core import LogRegTask
+from repro.data import make_binary_dataset
+
+COHORTS = [64, 512, 4096]
+ROUNDS = 2
+S = 8                       # iterations per round per client
+ETAS = [0.1, 0.08]
+EVENT_CAP = 4096            # largest C the event engine is timed at
+
+
+def _mk_task(X, y):
+    return LogRegTask(X, y, l2=1.0 / len(X), sample_seed=0)
+
+
+def _time_run(sim) -> float:
+    t0 = time.time()
+    sim.run(max_rounds=ROUNDS)
+    return time.time() - t0
+
+
+def run():
+    X, y = make_binary_dataset(2_048, 32, seed=0, noise=0.3)
+    event_cfg = FLConfig(engine="event")
+    cohort_cfg = FLConfig(engine="cohort", cohort_block=64)
+    kw = dict(sizes_per_client=[S] * ROUNDS, round_stepsizes=ETAS,
+              d=1, seed=0)
+
+    # warm the event engine's per-chunk jits once at tiny C
+    ev_task = _mk_task(X, y)
+    _time_run(make_simulator(event_cfg, ev_task, n_clients=8, **kw))
+
+    rows, report = [], {}
+    for C in COHORTS:
+        co_task = _mk_task(X, y)
+        co = make_simulator(cohort_cfg, co_task, n_clients=C, **kw)
+        _time_run(co)                       # compiles [C, D] block fns
+        # re-simulate with the warm cohort task: steady-state timing
+        co2 = make_simulator(cohort_cfg, co.ctask, n_clients=C, **kw)
+        dt_co = _time_run(co2)
+        tp_co = C * ROUNDS / dt_co
+
+        entry = {"clients": C, "rounds": ROUNDS, "iters_per_round": S,
+                 "cohort": {"sec": dt_co, "client_rounds_per_sec": tp_co}}
+        derived = f"cohort {tp_co:,.0f} cr/s"
+        if C <= EVENT_CAP:
+            dt_ev = _time_run(make_simulator(event_cfg, ev_task,
+                                             n_clients=C, **kw))
+            tp_ev = C * ROUNDS / dt_ev
+            entry["event"] = {"sec": dt_ev,
+                              "client_rounds_per_sec": tp_ev}
+            entry["speedup"] = tp_co / tp_ev
+            derived += f"; event {tp_ev:,.0f}; speedup {tp_co / tp_ev:.1f}x"
+        report[str(C)] = entry
+        rows.append((f"cohort_scale_C{C}", dt_co * 1e6, derived))
+
+    with open("BENCH_cohort.json", "w") as f:
+        json.dump(report, f, indent=2)
+    return rows

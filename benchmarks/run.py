@@ -10,7 +10,7 @@ import sys
 import traceback
 
 BENCHES = ["comm", "noise", "table3", "fig1a", "fig1b", "biased",
-           "delay", "step_time", "roofline"]
+           "delay", "step_time", "roofline", "cohort_scale"]
 
 
 def main() -> None:

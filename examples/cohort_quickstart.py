@@ -1,0 +1,54 @@
+"""Cohort engine quickstart: the same async FL protocol, two engines.
+
+The event simulator (repro.core.simulator) steps one Python client object
+at a time off a heapq — faithful but interpreter-bound.  The cohort
+engine (repro.cohort) holds the whole population as stacked [C, D] arrays
+and advances every unblocked client in one vmapped scan per tick, so
+thousands of clients per process are practical.  With a ``sample_seed``
+task the two produce the same trajectory (d=1), which this example checks
+before racing them.
+
+    PYTHONPATH=src python examples/cohort_quickstart.py
+"""
+import sys, os, time
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.cohort import CohortSimulator, make_simulator
+from repro.configs.base import FLConfig
+from repro.core import LogRegTask
+from repro.data import make_binary_dataset
+
+
+def main():
+    X, y = make_binary_dataset(n=4_000, d=32, seed=0, noise=0.3)
+    rounds, s, etas = 3, 16, [0.1, 0.08, 0.06]
+
+    # -- agreement on a small cohort (noise off, deterministic sampling) --
+    # the engine is an FLConfig knob: same call, either implementation
+    task = LogRegTask(X, y, l2=1.0 / len(X), sample_seed=0)
+    kw = dict(sizes_per_client=[s] * rounds, round_stepsizes=etas,
+              d=1, seed=0)
+    res_ev = make_simulator(FLConfig(engine="event"), task,
+                            n_clients=8, **kw).run(max_rounds=rounds)
+    res_co = make_simulator(FLConfig(engine="cohort", cohort_block=16),
+                            task, n_clients=8, **kw).run(max_rounds=rounds)
+    dw = np.abs(np.asarray(res_ev["model"]["w"])
+                - np.asarray(res_co["model"]["w"])).max()
+    print(f"[parity C=8]    rounds {res_ev['final']['round']} == "
+          f"{res_co['final']['round']}, max|dw| = {dw:.2e}")
+
+    # -- throughput at a population the event engine can't hold ----------
+    C = 1024
+    task = LogRegTask(X, y, l2=1.0 / len(X), sample_seed=0)
+    t0 = time.time()
+    res = CohortSimulator(task, n_clients=C, **kw).run(max_rounds=rounds)
+    dt = time.time() - t0
+    print(f"[cohort C={C}] rounds={res['final']['round']} "
+          f"acc={res['final']['accuracy']:.4f} "
+          f"({C * rounds / dt:,.0f} client-rounds/sec incl. jit)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+# Vectorized cohort engine: the async FL protocol (Algorithms 1-4) over a
+# batched client population — stacked [C, D] state, one vmapped scan per
+# tick, segment-sum server aggregation, fused Pallas clip+noise at round
+# completion (kernels/cohort_dp).
+from repro.cohort.engine import CohortEngine
+from repro.cohort.simulator import CohortSimulator, make_simulator
+from repro.cohort.state import BroadcastRing, CohortState, UpdateBuckets
+from repro.cohort.tasks import CohortLogRegTask, as_cohort_task
+
+__all__ = [
+    "CohortEngine", "CohortSimulator", "make_simulator",
+    "CohortState", "UpdateBuckets", "BroadcastRing",
+    "CohortLogRegTask", "as_cohort_task",
+]

@@ -1,0 +1,283 @@
+"""Tick-driven cohort engine: Algorithms 1–4 over stacked client state.
+
+Virtual time is quantized into ticks of dt = block / max(speed).  Each
+tick every unblocked client earns ``speed * dt`` iteration credit and the
+whole population advances in ONE vmapped scan (``CohortTask.run_block``)
+— the per-client Python objects and heapq of ``repro.core.simulator``
+become a handful of [C, D] array ops, which is what makes thousands of
+clients per process feasible.
+
+Ordering within a tick mirrors the event simulator:
+  1. the batched server applies the arrival bucket for this tick
+     (one pre-weighted [D] vector — segment-sum over the finishing
+     cohort instead of C sequential tree_maps), updates the H counts,
+     and fires broadcasts for every round that just completed;
+  2. due broadcasts are ISRRECEIVE'd in ascending k with a masked
+     where(): w ← v̂ − eta_i · U for clients whose freshest-seen k
+     increases (stale broadcasts drop out per client, exactly
+     Algorithm 4's guard);
+  3. the cohort advances: n_c = min(remaining, floor(credit)) masked
+     iterations per client, wait-gated clients (i == k + d) excluded;
+  4. finishing clients clip/noise their round update with the fused
+     ``kernels/cohort_dp`` kernel, their eta-weighted updates are
+     bucket-summed by (latency-quantized) arrival tick, and they advance
+     to the next round.
+
+Fidelity: with d = 1 broadcasts only ever reach blocked clients (U = 0,
+so ISRRECEIVE is an exact model replacement) and trajectories match the
+event simulator bit-for-bit given a ``sample_seed`` task — the parity
+test pins this.  With d > 1, latency quantization reorders same-tick
+arrivals; every such schedule is one the asynchronous protocol admits,
+so Theorem 1's guarantees still apply, but traces are not message-level
+identical to the event engine.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cohort.state import BroadcastRing, CohortState, UpdateBuckets
+from repro.kernels.cohort_dp import cohort_clip_noise
+
+
+@jax.jit
+def _isr_receive(w, U, v, eta, take):
+    """Masked Algorithm 4 ISRRECEIVE: w ← v̂ − eta_i · U on take rows."""
+    return jnp.where(take[:, None], v[None, :] - eta[:, None] * U, w)
+
+
+@jax.jit
+def _weighted_sum(rows, wgt):
+    return jnp.sum(rows * wgt[:, None], axis=0)
+
+
+@jax.jit
+def _apply_contrib(v, contrib):
+    return v - contrib
+
+
+@jax.jit
+def _zero_rows(rows, mask):
+    return jnp.where(mask[:, None], 0.0, rows)
+
+
+@jax.jit
+def _add_scaled_rows(w, delta, eta, mask):
+    """w += eta * delta on masked rows (client-side noise consistency)."""
+    return w + jnp.where(mask[:, None], eta[:, None] * delta, 0.0)
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+class CohortEngine:
+    def __init__(self, ctask, *, sizes_per_client,
+                 round_stepsizes: Sequence[float], d: int = 1,
+                 speeds: Optional[Sequence[float]] = None,
+                 latency_fn: Optional[Callable] = None, seed: int = 0,
+                 block: int = 64, dp_sigma: float = 0.0,
+                 dp_clip: float = 0.0, dp_round_clip: float = 0.0,
+                 use_dp_kernel: bool = True, interpret: bool = True):
+        self.ctask = ctask
+        C = ctask.C
+        self.C = C
+        self.d_gate = int(d)
+        self.block = int(block)
+        self.rng = np.random.default_rng(seed)
+        self.speeds = np.asarray(speeds if speeds is not None
+                                 else np.ones(C), np.float64)
+        assert len(self.speeds) == C
+        self.latency_fn = latency_fn or (lambda r: 0.05 + 0.05 * r.random())
+        self.dt = self.block / float(self.speeds.max())
+
+        if isinstance(sizes_per_client[0], (list, tuple)):
+            per_client = [list(s) for s in sizes_per_client]
+        else:
+            per_client = [list(sizes_per_client)] * C
+        L = max(len(s) for s in per_client)
+        sizes = np.empty((C, L), np.int64)
+        for c, s in enumerate(per_client):
+            sizes[c, :len(s)] = s
+            sizes[c, len(s):] = s[-1]            # s(i) = s[min(i, L-1)]
+        self.sizes = sizes
+        self.etas = np.asarray(round_stepsizes, np.float64)
+
+        v0 = ctask.init_flat()
+        self.state = CohortState(
+            w=jnp.tile(v0[None, :], (C, 1)),
+            U=jnp.zeros((C, ctask.D), jnp.float32),
+            v=v0,
+            i=np.zeros(C, np.int64), h=np.zeros(C, np.int64),
+            k=np.zeros(C, np.int64), credit=np.zeros(C, np.float64))
+        self.updates = UpdateBuckets()
+        self.bcasts = BroadcastRing()
+
+        # round-completion DP (noise_scale = clip * sigma, as in
+        # LogRegTask.add_round_noise; dp_round_clip > 0 additionally clips
+        # the whole round update = user-level DP)
+        self.dp_sigma = float(dp_sigma)
+        self.dp_clip = float(dp_clip)
+        self.dp_round_clip = float(dp_round_clip)
+        self.use_dp_kernel = bool(use_dp_kernel)
+        self.interpret = bool(interpret)
+        self.noise_base = jax.random.PRNGKey(seed ^ 0x5EED)
+
+        self.total_messages = 0
+        self.total_broadcasts = 0
+        self._h_counts: Dict[int, int] = {}     # Algorithm 3's H, per round
+        self.history: List[Dict[str, float]] = []
+
+    # -- host-side gathers --------------------------------------------------
+    def _eta_of(self, i: np.ndarray) -> np.ndarray:
+        return self.etas[np.minimum(i, len(self.etas) - 1)]
+
+    def _s_of(self, i: np.ndarray) -> np.ndarray:
+        cols = np.minimum(i, self.sizes.shape[1] - 1)
+        return self.sizes[np.arange(self.C), cols]
+
+    def _latency_ticks(self, n: int) -> np.ndarray:
+        lats = np.array([self.latency_fn(self.rng) for _ in range(n)])
+        return np.maximum(1, np.ceil(lats / self.dt)).astype(np.int64)
+
+    # -- one tick -----------------------------------------------------------
+    def step(self) -> None:
+        st = self.state
+        st.tick += 1
+        t = st.tick
+
+        # 1) server: apply this tick's arrival bucket, maybe broadcast
+        contrib, pairs = self.updates.pop(t)
+        if contrib is not None:
+            st.v = _apply_contrib(st.v, contrib)
+        for r, _c in pairs:
+            self._h_counts[r] = self._h_counts.get(r, 0) + 1
+        while self._h_counts.get(st.server_k, 0) >= self.C:
+            del self._h_counts[st.server_k]
+            st.server_k += 1
+            self.total_broadcasts += 1
+            at = t + self._latency_ticks(self.C)
+            self.bcasts.push(st.server_k, st.v, at)
+
+        # 2) deliver due broadcasts, ascending k, freshest-wins per client
+        due = self.bcasts.due(t)
+        for b in due:
+            take = (b["at"] <= t) & (b["k"] > st.k)
+            if take.any():
+                eta = jnp.asarray(self._eta_of(st.i), jnp.float32)
+                st.w = _isr_receive(st.w, st.U, b["v"], eta,
+                                    jnp.asarray(take))
+                st.k[take] = b["k"]
+        if due:
+            self.bcasts.retire(t)
+
+        # 3) advance the cohort: one vmapped masked block
+        active = ~st.blocked(self.d_gate)
+        st.credit[active] += self.speeds[active] * self.dt
+        s_i = self._s_of(st.i)
+        n = np.minimum(s_i - st.h, np.floor(st.credit).astype(np.int64))
+        n[~active] = 0
+        np.maximum(n, 0, out=n)
+        nmax = int(n.max())
+        if nmax > 0:
+            st.credit -= n
+            eta = jnp.asarray(self._eta_of(st.i), jnp.float32)
+            st.w, st.U = self.ctask.run_block(
+                st.w, st.U, jnp.asarray(st.i, jnp.int32),
+                jnp.asarray(st.h, jnp.int32), jnp.asarray(n, jnp.int32),
+                eta, _next_pow2(nmax))
+            st.h += n
+
+        # 4) round completions: clip/noise, enqueue, advance round
+        done = active & (st.h >= s_i)
+        if done.any():
+            self._finish_rounds(done)
+
+    def _finish_rounds(self, done: np.ndarray) -> None:
+        st = self.state
+        idx = np.flatnonzero(done)
+        self.total_messages += len(idx)
+        eta = self._eta_of(st.i)
+        done_dev = jnp.asarray(done)
+        wgt_all = jnp.asarray(eta * done, jnp.float32)
+
+        arrive = np.full(self.C, -1, np.int64)
+        arrive[idx] = st.tick + self._latency_ticks(len(idx))
+        groups = np.unique(arrive[idx])
+
+        if self.dp_sigma > 0.0 or self.dp_round_clip > 0.0:
+            key = jax.random.fold_in(self.noise_base, st.tick)
+            noised, agg = cohort_clip_noise(
+                st.U, key, wgt_all, done_dev,
+                clip=self.dp_round_clip,
+                noise_scale=self.dp_clip * self.dp_sigma,
+                use_kernel=self.use_dp_kernel, interpret=self.interpret)
+            # client-side consistency (Algorithm 1 line 24): w += eta *
+            # (sent − raw) so a later ŵ = v̂ − eta·U replacement stays
+            # consistent with the noise the server absorbed.
+            st.w = _add_scaled_rows(st.w, noised - st.U,
+                                    jnp.asarray(eta, jnp.float32), done_dev)
+            sent = noised
+        else:
+            sent, agg = st.U, None
+
+        for g in groups:
+            in_g = arrive == g
+            if agg is not None and len(groups) == 1:
+                vec = agg                       # fused kernel aggregate
+            else:
+                vec = _weighted_sum(sent, jnp.asarray(eta * in_g,
+                                                      jnp.float32))
+            self.updates.add(int(g), vec,
+                             [(int(st.i[c]), int(c))
+                              for c in np.flatnonzero(in_g)])
+
+        st.i[done] += 1
+        st.h[done] = 0
+        st.credit[done] = np.minimum(st.credit[done], self.block)
+        st.U = _zero_rows(sent, done_dev)
+
+    # -- main loop ----------------------------------------------------------
+    def run(self, *, max_rounds: int, eval_every: int = 1,
+            eval_fn: Optional[Callable] = None,
+            max_ticks: Optional[int] = None) -> Dict[str, Any]:
+        """Run until the server completes ``max_rounds`` broadcasts.
+
+        Same result schema as ``AsyncFLSimulator.run``.
+        """
+        if eval_fn is not None:
+            evals = lambda vec: eval_fn(self.ctask.unflatten(vec))  # noqa: E731
+        else:
+            evals = self.ctask.metrics
+        st = self.state
+        if max_ticks is None:
+            per_round = int(self._s_of(np.zeros(self.C, np.int64)).max()
+                            // self.block + 8)
+            max_ticks = max(1000, max_rounds * per_round * 16)
+        next_eval = eval_every
+        while st.server_k < max_rounds:
+            if st.tick >= max_ticks:
+                raise RuntimeError(
+                    f"cohort engine stalled: {st.tick} ticks, "
+                    f"server_k={st.server_k} < {max_rounds} "
+                    f"(in flight: {len(self.updates)} updates, "
+                    f"{len(self.bcasts.pending)} broadcasts)")
+            self.step()
+            if st.server_k >= next_eval:
+                m = evals(st.v)
+                m.update(round=st.server_k, time=st.tick * self.dt,
+                         messages=self.total_messages)
+                self.history.append(m)
+                next_eval = st.server_k + eval_every
+        final = evals(st.v)
+        final.update(round=st.server_k, time=st.tick * self.dt,
+                     messages=self.total_messages,
+                     broadcasts=self.total_broadcasts)
+        return {"final": final, "history": self.history,
+                "model": self.ctask.unflatten(st.v)}

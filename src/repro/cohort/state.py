@@ -1,0 +1,86 @@
+"""Stacked client-population state and message buffers for the cohort engine.
+
+``CohortState`` holds the whole population as arrays with a leading client
+axis: models and round-update accumulators live on device as flat
+``[C, D]`` blocks (D = flattened model dim), while the small per-client
+protocol counters (round i, in-round iteration h, freshest broadcast k,
+fractional iteration credit) stay host-side — they drive Python control
+flow every tick and would cost a device sync each if they lived in jnp.
+
+Messages are metadata + payload, split the same way:
+  * ``UpdateBuckets`` — because the server only ever *sums* arriving
+    updates (v ← v − Σ eta_i U), in-flight update payloads are pre-weighted
+    and bucket-summed by arrival tick into one [D] vector per tick
+    (segment-sum semantics without dynamic scatter); the (round, client)
+    pairs the server's H set needs are kept as host metadata.
+  * ``BroadcastRing`` — pending (v, k) broadcasts with per-client arrival
+    ticks.  The wait gate bounds how far clients lag the server, so only a
+    handful are ever outstanding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+
+@dataclass
+class CohortState:
+    """Population state: device blocks + host counters (leading axis C)."""
+    w: Any                 # [C, D] client models (device)
+    U: Any                 # [C, D] round-update accumulators (device)
+    v: Any                 # [D] server model (device)
+    i: np.ndarray          # [C] current round (host)
+    h: np.ndarray          # [C] iterations done in round i (host)
+    k: np.ndarray          # [C] freshest broadcast counter seen (host)
+    credit: np.ndarray     # [C] fractional iteration credit (host)
+    server_k: int = 0      # completed-round counter (Algorithm 3's k)
+    tick: int = 0
+
+    def blocked(self, d: int) -> np.ndarray:
+        """Wait gate, vectorized: block while i >= k + d (Supp. B.2)."""
+        return self.i >= self.k + d
+
+
+@dataclass
+class UpdateBuckets:
+    """In-flight client->server updates, bucket-summed by arrival tick."""
+    contrib: Dict[int, Any] = field(default_factory=dict)   # tick -> [D]
+    meta: Dict[int, List[Tuple[int, int]]] = field(default_factory=dict)
+
+    def add(self, tick: int, vec, pairs: List[Tuple[int, int]]) -> None:
+        if tick in self.contrib:
+            self.contrib[tick] = self.contrib[tick] + vec
+        else:
+            self.contrib[tick] = vec
+        self.meta.setdefault(tick, []).extend(pairs)
+
+    def pop(self, tick: int):
+        """-> ([D] contribution or None, [(round, client), ...])."""
+        return (self.contrib.pop(tick, None), self.meta.pop(tick, []))
+
+    def __len__(self) -> int:
+        return sum(len(m) for m in self.meta.values())
+
+
+@dataclass
+class BroadcastRing:
+    """Outstanding server->client broadcasts (few: gate bounds the lag)."""
+    pending: List[dict] = field(default_factory=list)
+
+    def push(self, k: int, v, arrive_ticks: np.ndarray) -> None:
+        self.pending.append({"k": k, "v": v, "at": arrive_ticks})
+
+    def due(self, tick: int):
+        """Broadcasts with any arrival <= tick, ascending k (ISRRECEIVE
+        drops stale ones per client via the k-comparison)."""
+        return sorted((b for b in self.pending if (b["at"] <= tick).any()),
+                      key=lambda b: b["k"])
+
+    def retire(self, tick: int) -> None:
+        horizon = np.iinfo(np.int64).max
+        for b in self.pending:
+            b["at"][b["at"] <= tick] = horizon
+        self.pending = [b for b in self.pending
+                        if (b["at"] < horizon).any()]

@@ -1,0 +1,112 @@
+"""Batched (cohort) task adapters: per-round client compute with a leading
+client axis.
+
+A cohort task exposes the same round computation as ``repro.core.tasks``
+but over flat ``[C, D]`` state blocks, advanced for the *whole population*
+in one jitted ``vmap``-of-``scan`` call (``run_block``).  Per-iteration
+sample draws are addressed by ``(client, round, iteration)`` via
+``fold_in`` — the same derivation ``LogRegTask`` uses in its
+``sample_seed`` mode — so a cohort trajectory is bit-reproducible against
+the event simulator regardless of how either engine chunks a round.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tasks import LogRegTask, clip_tree
+from repro.models import logreg
+
+
+class CohortLogRegTask:
+    """Whole-population view of ``LogRegTask`` (the paper's experiments)."""
+
+    def __init__(self, task: LogRegTask, n_clients: int, *, seed: int = 0):
+        self.task = task
+        self.C = int(n_clients)
+        self.d_feat = task.d
+        self.D = task.d + 1                     # w (d) then b (1), flat
+        base_seed = task.sample_seed if task.sample_seed is not None \
+            else seed
+        base = jax.random.PRNGKey(base_seed)
+        self.base_keys = jax.vmap(
+            lambda c: jax.random.fold_in(base, c))(jnp.arange(self.C))
+        self._block_fns: Dict[int, Any] = {}
+
+    # -- flat layout -------------------------------------------------------
+    def flatten(self, m):
+        return jnp.concatenate([m["w"].astype(jnp.float32),
+                                m["b"].astype(jnp.float32)[None]])
+
+    def unflatten(self, vec):
+        return {"w": vec[:self.d_feat], "b": vec[self.d_feat]}
+
+    def init_flat(self):
+        return self.flatten(self.task.init_model())
+
+    def metrics(self, vec) -> Dict[str, float]:
+        return self.task.metrics(self.unflatten(vec))
+
+    # -- batched compute ---------------------------------------------------
+    def run_block(self, w, U, i, h, n, eta, block: int):
+        """Advance every client by up to ``block`` local SGD iterations.
+
+        w, U: [C, D] device blocks; i, h, n: [C] int32 (round, in-round
+        offset, iterations to take this call); eta: [C] f32 round step
+        sizes.  Steps j >= n[c] are masked no-ops, so one compiled block
+        size serves heterogeneous per-client counts.
+        """
+        fn = self._block_fns.get(block)
+        if fn is None:
+            fn = self._make_block_fn(block)
+        return fn(w, U, i, h, n, eta)
+
+    def _make_block_fn(self, block: int):
+        X, y, l2 = self.task.X, self.task.y, self.task.l2
+        clip, n_data = self.task.dp_clip, self.task.X.shape[0]
+        d = self.d_feat
+        base_keys = self.base_keys
+
+        def per_client(w_c, U_c, base, i_c, h_c, n_c, eta_c):
+            params = {"w": w_c[:d], "b": w_c[d]}
+            upd = {"w": U_c[:d], "b": U_c[d]}
+            round_key = jax.random.fold_in(base, i_c)
+
+            def body(carry, j):
+                p, u = carry
+                r = jax.random.fold_in(round_key, h_c + j)
+                idx = jax.random.randint(r, (), 0, n_data)
+                g = jax.grad(logreg.per_example_loss)(p, X[idx], y[idx], l2)
+                if clip > 0.0:
+                    g = clip_tree(g, clip)
+                act = (j < n_c).astype(jnp.float32)
+                g = jax.tree_util.tree_map(lambda l: act * l, g)
+                u = jax.tree_util.tree_map(jnp.add, u, g)
+                p = jax.tree_util.tree_map(lambda a, gg: a - eta_c * gg,
+                                           p, g)
+                return (p, u), None
+
+            (params, upd), _ = jax.lax.scan(body, (params, upd),
+                                            jnp.arange(block))
+            w_out = jnp.concatenate([params["w"], params["b"][None]])
+            u_out = jnp.concatenate([upd["w"], upd["b"][None]])
+            return w_out, u_out
+
+        def run(w, U, i, h, n, eta):
+            return jax.vmap(per_client)(w, U, base_keys, i, h, n, eta)
+
+        fn = jax.jit(run)
+        self._block_fns[block] = fn
+        return fn
+
+
+def as_cohort_task(task, n_clients: int, *, seed: int = 0):
+    """Adapt a ``repro.core.tasks`` task (or pass through a cohort task)."""
+    if hasattr(task, "run_block"):
+        return task
+    if isinstance(task, LogRegTask):
+        return CohortLogRegTask(task, n_clients, seed=seed)
+    raise TypeError(f"no cohort adapter for {type(task).__name__}; "
+                    "provide an object with run_block/init_flat/metrics")

@@ -267,6 +267,9 @@ class FLConfig:
     d: int = 1                    # gate i <= k + d
     total_grads: int = 20_000     # K
     seed: int = 0
+    engine: str = "event"         # event (repro.core.simulator) |
+    #                               cohort (repro.cohort, batched)
+    cohort_block: int = 64        # iteration credit per cohort tick
 
 
 @dataclass(frozen=True)

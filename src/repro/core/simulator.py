@@ -20,6 +20,8 @@ import math
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.protocol import BroadcastMsg, Client, Server, UpdateMsg
@@ -166,7 +168,6 @@ def run_sync_baseline(task, *, n_clients: int, n_rounds: int,
                       sample_size: int, eta: float, seed: int = 0
                       ) -> Dict[str, Any]:
     """Original synchronous FL (constant step + sample size) baseline."""
-    import jax
     w = task.init_model()
     history = []
     key = jax.random.PRNGKey(seed)
@@ -178,7 +179,6 @@ def run_sync_baseline(task, *, n_clients: int, n_rounds: int,
                 w, task.zero_update(), round_idx=r, client_id=c,
                 start_h=0, n_iters=sample_size, eta=eta, rng=sub)
             updates.append(U)
-        import jax.numpy as jnp
         total = updates[0]
         for U in updates[1:]:
             total = jax.tree_util.tree_map(jnp.add, total, U)

@@ -35,16 +35,26 @@ def clip_tree(tree, clip: float):
 
 
 class LogRegTask:
-    """Paper experiment task (strongly-convex / plain-convex logreg)."""
+    """Paper experiment task (strongly-convex / plain-convex logreg).
+
+    ``sample_seed``: when set, the per-iteration sample index is derived
+    from ``fold_in(fold_in(fold_in(key(sample_seed), client), round), h)``
+    instead of the client's streaming rng.  The draw then depends only on
+    *(client, round, iteration)* — not on how the event simulator happens
+    to chunk a round into ``run()`` calls — which makes trajectories
+    reproducible across engines (see ``repro.cohort``).
+    """
 
     def __init__(self, X, y, *, l2: float = 0.0, dp_clip: float = 0.0,
-                 dp_sigma: float = 0.0, d_features: Optional[int] = None):
+                 dp_sigma: float = 0.0, d_features: Optional[int] = None,
+                 sample_seed: Optional[int] = None):
         self.X = jnp.asarray(X, jnp.float32)
         self.y = jnp.asarray(y, jnp.float32)
         self.l2 = float(l2)
         self.dp_clip = float(dp_clip)
         self.dp_sigma = float(dp_sigma)
         self.d = d_features or self.X.shape[1]
+        self.sample_seed = sample_seed
         self._chunk_fns: Dict[int, Any] = {}
 
     # -- model ------------------------------------------------------------
@@ -57,14 +67,13 @@ class LogRegTask:
 
     # -- per-chunk jitted runner -------------------------------------------
     def _chunk_fn(self, n: int):
+        """Jitted n-iteration SGD chunk taking a (n,)-key array."""
         if n in self._chunk_fns:
             return self._chunk_fns[n]
         X, y, l2 = self.X, self.y, self.l2
         clip, n_data = self.dp_clip, self.X.shape[0]
 
-        def run(w, U, eta, rng):
-            rngs = jax.random.split(rng, n)
-
+        def run(w, U, eta, keys):
             def step2(carry, r):
                 w, U = carry
                 idx = jax.random.randint(r, (), 0, n_data)
@@ -75,7 +84,7 @@ class LogRegTask:
                 w = jax.tree_util.tree_map(lambda p, gg: p - eta * gg, w, g)
                 return (w, U), None
 
-            (w, U), _ = jax.lax.scan(step2, (w, U), rngs)
+            (w, U), _ = jax.lax.scan(step2, (w, U), keys)
             return w, U
 
         fn = jax.jit(run)
@@ -94,12 +103,25 @@ class LogRegTask:
         return out
 
     # -- Task interface ----------------------------------------------------
+    def iteration_key_base(self, client_id: int, round_idx):
+        """(client, round)-addressed key base for deterministic sampling."""
+        base = jax.random.PRNGKey(self.sample_seed)
+        return jax.random.fold_in(jax.random.fold_in(base, client_id),
+                                  round_idx)
+
     def run_iterations(self, w, U, *, round_idx, client_id, start_h,
                        n_iters, eta, rng):
-        del round_idx, client_id, start_h
+        h = int(start_h)
         for j, c in enumerate(self._chunks(int(n_iters))):
-            rng, sub = jax.random.split(rng)
-            w, U = self._chunk_fn(c)(w, U, jnp.float32(eta), sub)
+            if self.sample_seed is not None:
+                base = self.iteration_key_base(client_id, round_idx)
+                keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(
+                    h + jnp.arange(c))
+            else:
+                rng, sub = jax.random.split(rng)
+                keys = jax.random.split(sub, c)
+            w, U = self._chunk_fn(c)(w, U, jnp.float32(eta), keys)
+            h += c
         return w, U
 
     def add_round_noise(self, w, U, *, eta, rng):

@@ -1,4 +1,5 @@
 # TPU Pallas kernels for the paper's compute hot spots.
 # Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit
 # wrapper w/ padding + ref fallback), ref.py (pure-jnp oracle).
-from repro.kernels import dp_clip, flash_attention, ssd_scan  # noqa: F401
+from repro.kernels import (cohort_dp, dp_clip, flash_attention,  # noqa: F401
+                           ssd_scan)

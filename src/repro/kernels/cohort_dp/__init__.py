@@ -1,0 +1,7 @@
+from repro.kernels.cohort_dp.kernel import (cohort_clip_noise_kernel,
+                                            cohort_clip_noise_prng_kernel)
+from repro.kernels.cohort_dp.ops import cohort_clip_noise
+from repro.kernels.cohort_dp.ref import cohort_clip_noise_ref
+
+__all__ = ["cohort_clip_noise_kernel", "cohort_clip_noise_prng_kernel",
+           "cohort_clip_noise", "cohort_clip_noise_ref"]

@@ -1,0 +1,171 @@
+"""Fused per-client clip → noise → accumulate Pallas kernel (TPU target).
+
+The cohort engine's round-completion hot spot (Algorithm 1 lines 17/23-24
+lifted to a *batched* client population): given the round updates of a
+cohort U (C, D) — C clients, D the flattened model dimension — produce
+
+    out[c] = U[c] * min(1, clip / ||U[c]||_2) + noise_scale * N(0, 1)
+    agg[d] = sum_c weight[c] * out[c, d]
+
+for the rows selected by ``mask`` (non-finishing clients pass through
+unchanged).  ``weight`` folds the server round step size eta(i_c) into the
+reduction, so ``agg`` is exactly the vector the batched server subtracts
+from the global model for one arrival bucket — the XLA baseline would
+materialize the scaled+noised (C, D) copy and reduce it separately.
+
+Layout follows ``kernels/dp_clip``: a sequential-grid pass accumulates
+per-row squared norms into a (C,) accumulator that lives in the output ref
+across grid steps, then a tiled pass scales rows, adds noise, and reduces.
+Two noise paths:
+  * operand noise (CPU/interpret-safe): standard normals are streamed in
+    as a (C, D) input and the kernel fuses clip+add+reduce;
+  * in-kernel PRNG (TPU only): ``pltpu.prng_random_bits`` + Box–Muller
+    per D-tile, so the noise block never touches HBM.  The TPU PRNG
+    primitives have no CPU lowering, hence no interpret mode for it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sqsum_kernel(u_ref, out_ref):
+    di = pl.program_id(0)
+
+    @pl.when(di == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    u = u_ref[...].astype(jnp.float32)              # (C, d_block)
+    out_ref[...] += jnp.sum(u * u, axis=1)
+
+
+def _scale_noise(u, sq, noise, mask, wgt, *, clip, noise_scale):
+    """Shared tile math for both noise paths."""
+    if clip > 0.0:
+        norms = jnp.sqrt(sq)                        # (C,)
+        scale = 1.0 / jnp.maximum(1.0, norms / clip)
+    else:
+        scale = jnp.ones_like(mask)
+    scale = 1.0 + mask * (scale - 1.0)              # pass-through rows
+    out = u * scale[:, None]
+    if noise_scale > 0.0:
+        out = out + (noise_scale * mask)[:, None] * noise
+    return out, jnp.sum(out * wgt[:, None], axis=0)
+
+
+def _clip_noise_kernel(u_ref, sq_ref, noise_ref, mask_ref, wgt_ref,
+                       out_u_ref, out_agg_ref, *, clip: float,
+                       noise_scale: float):
+    out, agg = _scale_noise(
+        u_ref[...].astype(jnp.float32), sq_ref[...], noise_ref[...],
+        mask_ref[...], wgt_ref[...], clip=clip, noise_scale=noise_scale)
+    out_u_ref[...] = out.astype(out_u_ref.dtype)
+    out_agg_ref[...] = agg
+
+
+def _clip_noise_prng_kernel(seed_ref, u_ref, sq_ref, mask_ref, wgt_ref,
+                            out_u_ref, out_agg_ref, *, clip: float,
+                            noise_scale: float):
+    # Per-tile stream: each grid step reseeds so tiles draw independently.
+    pltpu.prng_seed(seed_ref[0] + pl.program_id(0))
+    shape = u_ref.shape
+    b1 = pltpu.prng_random_bits(shape)
+    b2 = pltpu.prng_random_bits(shape)
+    # Box–Muller from two uniforms built off the top 24 bits.
+    u1 = (b1 >> 8).astype(jnp.float32) * (1.0 / (1 << 24)) + 2.0 ** -25
+    u2 = (b2 >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+    normal = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
+    out, agg = _scale_noise(
+        u_ref[...].astype(jnp.float32), sq_ref[...], normal,
+        mask_ref[...], wgt_ref[...], clip=clip, noise_scale=noise_scale)
+    out_u_ref[...] = out.astype(out_u_ref.dtype)
+    out_agg_ref[...] = agg
+
+
+def _row_sqsum(u, *, d_block: int, interpret: bool):
+    C, D = u.shape
+    nd = D // d_block
+    return pl.pallas_call(
+        _sqsum_kernel,
+        grid=(nd,),
+        in_specs=[pl.BlockSpec((C, d_block), lambda d: (0, d))],
+        out_specs=pl.BlockSpec((C,), lambda d: (0,)),
+        out_shape=jax.ShapeDtypeStruct((C,), jnp.float32),
+        interpret=interpret,
+    )(u)
+
+
+def cohort_clip_noise_kernel(u, noise, weights, mask, *, clip: float,
+                             noise_scale: float, d_block: int = 128,
+                             interpret: bool = True):
+    """Operand-noise path.  u, noise: (C, D); D % d_block == 0, C % 8 == 0.
+
+    Returns (out (C, D), agg (D,)).
+    """
+    C, D = u.shape
+    assert D % d_block == 0, (D, d_block)
+    nd = D // d_block
+    sq = (_row_sqsum(u, d_block=d_block, interpret=interpret)
+          if clip > 0.0 else jnp.zeros((C,), jnp.float32))
+
+    return pl.pallas_call(
+        functools.partial(_clip_noise_kernel, clip=clip,
+                          noise_scale=noise_scale),
+        grid=(nd,),
+        in_specs=[
+            pl.BlockSpec((C, d_block), lambda d: (0, d)),
+            pl.BlockSpec((C,), lambda d: (0,)),
+            pl.BlockSpec((C, d_block), lambda d: (0, d)),
+            pl.BlockSpec((C,), lambda d: (0,)),
+            pl.BlockSpec((C,), lambda d: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((C, d_block), lambda d: (0, d)),
+            pl.BlockSpec((d_block,), lambda d: (d,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C, D), jnp.float32),
+            jax.ShapeDtypeStruct((D,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(u, sq, noise, mask, weights)
+
+
+def cohort_clip_noise_prng_kernel(u, seed, weights, mask, *, clip: float,
+                                  noise_scale: float, d_block: int = 128):
+    """In-kernel-PRNG path (TPU only — no interpret/CPU lowering).
+
+    seed: (1,) int32.  Returns (out (C, D), agg (D,)).
+    """
+    C, D = u.shape
+    assert D % d_block == 0, (D, d_block)
+    nd = D // d_block
+    sq = (_row_sqsum(u, d_block=d_block, interpret=False)
+          if clip > 0.0 else jnp.zeros((C,), jnp.float32))
+
+    return pl.pallas_call(
+        functools.partial(_clip_noise_prng_kernel, clip=clip,
+                          noise_scale=noise_scale),
+        grid=(nd,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((C, d_block), lambda d: (0, d)),
+            pl.BlockSpec((C,), lambda d: (0,)),
+            pl.BlockSpec((C,), lambda d: (0,)),
+            pl.BlockSpec((C,), lambda d: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((C, d_block), lambda d: (0, d)),
+            pl.BlockSpec((d_block,), lambda d: (d,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C, D), jnp.float32),
+            jax.ShapeDtypeStruct((D,), jnp.float32),
+        ],
+        interpret=False,
+    )(seed, u, sq, mask, weights)

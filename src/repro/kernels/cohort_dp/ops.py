@@ -1,0 +1,65 @@
+"""Jitted wrapper for the cohort clip+noise kernel, with padding.
+
+``cohort_clip_noise`` pads the client axis to the f32 sublane multiple and
+the model axis to the lane-block multiple, generates the Gaussian noise
+(operand path) or derives an in-kernel PRNG seed (TPU path) from a jax
+key, and unpads.  Padded rows carry mask 0 / weight 0, so they pass
+through as zeros and contribute nothing to the aggregate.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cohort_dp.kernel import (cohort_clip_noise_kernel,
+                                            cohort_clip_noise_prng_kernel)
+from repro.kernels.cohort_dp.ref import cohort_clip_noise_ref
+
+
+@functools.partial(jax.jit, static_argnames=("clip", "noise_scale",
+                                             "d_block", "use_kernel",
+                                             "interpret", "in_kernel_rng"))
+def cohort_clip_noise(u, key, weights, mask, *, clip: float = 0.0,
+                      noise_scale: float = 0.0, d_block: int = 128,
+                      use_kernel: bool = True, interpret: bool = True,
+                      in_kernel_rng: bool = False):
+    """u: (C, D) round updates -> (noised rows (C, D), weighted agg (D,)).
+
+    clip <= 0 disables the per-row norm clip (example-granularity DP clips
+    inside the iteration loop instead); noise_scale is the std-dev
+    multiplier on the standard-normal draw (protocol: dp_clip * dp_sigma).
+    With ``in_kernel_rng`` the noise is drawn inside the kernel (TPU only,
+    distributionally equivalent but not bit-matching the operand path).
+    """
+    C, D = u.shape
+    u = u.astype(jnp.float32)
+    mask_f = mask.astype(jnp.float32)
+    wgt = weights.astype(jnp.float32)
+    draw_operand_noise = noise_scale > 0.0 and not (use_kernel
+                                                    and in_kernel_rng)
+    noise = (jax.random.normal(key, (C, D), jnp.float32)
+             if draw_operand_noise else jnp.zeros((C, D), jnp.float32))
+    if not use_kernel:
+        return cohort_clip_noise_ref(u, noise, wgt, mask_f, clip=clip,
+                                     noise_scale=noise_scale)
+
+    pad_c = (-C) % 8
+    pad_d = (-D) % d_block
+    if pad_c or pad_d:
+        u = jnp.pad(u, ((0, pad_c), (0, pad_d)))
+        noise = jnp.pad(noise, ((0, pad_c), (0, pad_d)))
+        mask_f = jnp.pad(mask_f, (0, pad_c))
+        wgt = jnp.pad(wgt, (0, pad_c))
+    if in_kernel_rng:
+        seed = jax.random.randint(key, (1,), 0, jnp.iinfo(jnp.int32).max,
+                                  jnp.int32)
+        out, agg = cohort_clip_noise_prng_kernel(
+            u, seed, wgt, mask_f, clip=clip, noise_scale=noise_scale,
+            d_block=d_block)
+    else:
+        out, agg = cohort_clip_noise_kernel(
+            u, noise, wgt, mask_f, clip=clip, noise_scale=noise_scale,
+            d_block=d_block, interpret=interpret)
+    return out[:C, :D], agg[:D]

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the cohort clip+noise+accumulate kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cohort_clip_noise_ref(u, noise, weights, mask, *, clip: float,
+                          noise_scale: float):
+    """Batched round-completion DP over a client cohort.
+
+    u:       (C, D) per-client round updates (flattened model dim)
+    noise:   (C, D) standard-normal draws
+    weights: (C,)   per-client aggregation weight (eta_i * send mask)
+    mask:    (C,)   1.0 for clients finishing a round, 0.0 pass-through
+
+    Returns (out, agg):
+      out[c] = u[c] * min(1, clip/||u[c]||) + noise_scale * noise[c]
+               for masked rows (clip <= 0 disables the row clip);
+               pass-through rows return u[c] unchanged.
+      agg[d] = sum_c weights[c] * out[c, d]
+    """
+    u = u.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+    if clip > 0.0:
+        norms = jnp.sqrt(jnp.sum(u * u, axis=1))
+        scale = 1.0 / jnp.maximum(1.0, norms / clip)
+    else:
+        scale = jnp.ones_like(mask)
+    scale = 1.0 + mask * (scale - 1.0)          # masked-out rows: scale 1
+    out = u * scale[:, None]
+    if noise_scale > 0.0:
+        out = out + (noise_scale * mask)[:, None] * noise.astype(jnp.float32)
+    agg = jnp.sum(out * weights.astype(jnp.float32)[:, None], axis=0)
+    return out, agg

@@ -1,0 +1,137 @@
+"""Engine parity (cohort vs event simulator) and the cohort DP kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cohort import CohortSimulator, as_cohort_task
+from repro.configs.base import SampleSequenceConfig, StepSizeConfig
+from repro.core import (AsyncFLSimulator, LogRegTask, round_stepsizes,
+                        rounds_for_budget)
+from repro.data import make_binary_dataset
+from repro.kernels.cohort_dp import cohort_clip_noise, cohort_clip_noise_ref
+
+
+# --- engine parity ----------------------------------------------------------
+
+def test_cohort_matches_event_sim_paper_logreg():
+    """Same LogRegTask seed/config (noise off): round counts and final
+    model agree across engines on the paper_logreg recipe (Fig 1a kinds,
+    reduced budget)."""
+    X, y = make_binary_dataset(1_000, 32, seed=1, noise=0.3)
+    task = LogRegTask(X, y, l2=1.0 / len(X), sample_seed=11)
+    n_clients = 5
+    sizes = rounds_for_budget(
+        SampleSequenceConfig(kind="linear", s0=50, a=50.0), 800)
+    etas = round_stepsizes(
+        StepSizeConfig(kind="inv_t", eta0=0.1, beta=0.001), sizes)
+    kw = dict(
+        n_clients=n_clients,
+        sizes_per_client=[[max(1, s // n_clients) for s in sizes]]
+        * n_clients,
+        round_stepsizes=etas, d=1, seed=0,
+        speeds=[1.0, 0.8, 1.2, 0.9, 1.1])
+
+    res_ev = AsyncFLSimulator(task, **kw).run(max_rounds=len(sizes))
+    res_co = CohortSimulator(task, **kw).run(max_rounds=len(sizes))
+
+    assert res_ev["final"]["round"] == res_co["final"]["round"]
+    np.testing.assert_allclose(np.asarray(res_ev["model"]["w"]),
+                               np.asarray(res_co["model"]["w"]),
+                               atol=1e-4)
+    np.testing.assert_allclose(float(res_ev["model"]["b"]),
+                               float(res_co["model"]["b"]), atol=1e-4)
+    assert abs(res_ev["final"]["accuracy"]
+               - res_co["final"]["accuracy"]) < 1e-3
+
+
+def test_cohort_gate_d2_runs_and_converges():
+    """d=2 regime (mid-round ISRRECEIVE): protocol completes, loss drops."""
+    X, y = make_binary_dataset(600, 16, seed=2, noise=0.3)
+    task = LogRegTask(X, y, l2=1.0 / len(X), sample_seed=3)
+    sim = CohortSimulator(
+        task, n_clients=6, sizes_per_client=[4, 5, 6, 7, 8],
+        round_stepsizes=[0.1, 0.08, 0.06, 0.05, 0.04], d=2, seed=1,
+        speeds=[1.0, 0.5, 1.5, 0.7, 1.2, 0.9], block=4)
+    loss0 = task.metrics(task.init_model())["loss"]
+    res = sim.run(max_rounds=5)
+    assert res["final"]["round"] == 5
+    assert res["final"]["loss"] < loss0
+    # every client sent one update per completed round (+ gate slack)
+    assert res["final"]["messages"] >= 6 * 5
+
+
+def test_cohort_dp_noise_perturbs_model():
+    X, y = make_binary_dataset(400, 16, seed=4, noise=0.3)
+    clean = LogRegTask(X, y, l2=1.0 / 400, sample_seed=5)
+    noisy = LogRegTask(X, y, l2=1.0 / 400, dp_clip=0.1, dp_sigma=4.0,
+                       sample_seed=5)
+    kw = dict(n_clients=4, sizes_per_client=[6, 8],
+              round_stepsizes=[0.1, 0.08], d=1, seed=0)
+    w_clean = CohortSimulator(clean, **kw).run(max_rounds=2)["model"]["w"]
+    w_noisy = CohortSimulator(noisy, **kw).run(max_rounds=2)["model"]["w"]
+    assert float(jnp.max(jnp.abs(w_clean - w_noisy))) > 1e-5
+
+
+# --- fused clip+noise kernel vs oracle --------------------------------------
+
+@pytest.mark.parametrize("C,D,clip,noise_scale", [
+    (12, 300, 0.5, 0.2),       # clip + noise, padded both axes
+    (16, 512, 0.0, 0.2),       # noise only (example-granularity DP)
+    (8, 256, 1.0, 0.0),        # clip only
+    (5, 100, 0.3, 0.1),        # heavy padding
+])
+def test_cohort_dp_kernel_matches_ref(C, D, clip, noise_scale):
+    key = jax.random.PRNGKey(0)
+    u = jax.random.normal(jax.random.fold_in(key, 1), (C, D)) * 2.0
+    mask = jnp.arange(C) % 3 != 0
+    wgt = mask * jnp.linspace(0.1, 0.5, C)
+    out_k, agg_k = cohort_clip_noise(u, key, wgt, mask, clip=clip,
+                                     noise_scale=noise_scale,
+                                     use_kernel=True, interpret=True)
+    out_r, agg_r = cohort_clip_noise(u, key, wgt, mask, clip=clip,
+                                     noise_scale=noise_scale,
+                                     use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(agg_k), np.asarray(agg_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_cohort_dp_kernel_passthrough_and_agg_semantics():
+    """Masked-out rows pass through untouched; agg is the weighted sum."""
+    C, D = 8, 128
+    u = jax.random.normal(jax.random.PRNGKey(2), (C, D))
+    mask = jnp.array([1, 0, 1, 0, 1, 0, 1, 0], bool)
+    wgt = mask * 0.25
+    out, agg = cohort_clip_noise(u, jax.random.PRNGKey(3), wgt, mask,
+                                 clip=0.5, noise_scale=0.1)
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(u[1]),
+                               atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(agg),
+        np.asarray(jnp.sum(out * wgt[:, None], axis=0)), atol=1e-5)
+
+
+def test_as_cohort_task_rejects_unknown():
+    with pytest.raises(TypeError):
+        as_cohort_task(object(), 4)
+
+
+def test_make_simulator_reads_fl_config():
+    from repro.cohort import make_simulator
+    from repro.configs.base import FLConfig
+    from repro.core.simulator import AsyncFLSimulator
+
+    X, y = make_binary_dataset(200, 16, seed=0, noise=0.3)
+    task = LogRegTask(X, y, sample_seed=0)
+    kw = dict(n_clients=2, sizes_per_client=[2],
+              round_stepsizes=[0.1], d=1, seed=0)
+    sim = make_simulator(FLConfig(engine="cohort", cohort_block=7),
+                         task, **kw)
+    assert isinstance(sim, CohortSimulator)
+    assert sim.engine.block == 7
+    assert isinstance(make_simulator(FLConfig(engine="event"), task, **kw),
+                      AsyncFLSimulator)
+    with pytest.raises(ValueError):
+        make_simulator("vmap", task, **kw)
