@@ -1,78 +1,129 @@
-"""Cohort vs event engine throughput at C in {64, 512, 4096}.
+"""Engine throughput at C in {64, 512, 4096}: event vs host-cohort vs
+device-resident cohort.
 
-Derived metric: client-rounds/sec per engine and the cohort speedup.
-Both engines run the identical workload (same task, sizes, step sizes,
-d=1), selected through ``make_simulator(FLConfig(engine=...), ...)``.
+Two workloads, identical across engines (same task, sizes, step sizes,
+d=1), selected through ``make_simulator(FLConfig(engine=...), ...)``:
+
+  * ``compute_r2_s8`` — 2 rounds x 8 iters/client (PR-1's workload).
+    Wall clock is dominated by the vmapped SGD blocks themselves, so it
+    measures how little the engines add on top of the math.  The event
+    engine is timed here up to C=4096 (minutes — it is the baseline the
+    cohort engines exist to replace).
+  * ``fedsgd_r8_s1`` — 8 rounds x 1 iter/client: FedSGD, the canonical
+    protocol-dominated regime of massively federated populations taking
+    a single local step per round (Bonawitz et al., 1902.01046).  This
+    isolates the per-tick engine overhead — the host-loop engine pays
+    Python control flow + host<->device syncs every tick, the device
+    engine pays one jitted ``lax.while_loop`` per eval segment.
+
 jit caches live on the task objects — the event engine's per-chunk fns
-on the LogRegTask, the cohort engine's block fns on the CohortLogRegTask
-— so each engine is warmed by one run and timed on a fresh simulator
-that reuses the warm task: the event engine at small C (its per-chunk
-jits are population-independent), the cohort engine at full C (its
-vmapped block fns compile per population size).
+on the LogRegTask, the cohort engines' block/segment fns on the
+CohortLogRegTask — so each engine is warmed by one run and timed on
+fresh simulators that reuse the warm task.  Cohort engines record the
+median of 3 runs (host wall clock is noisy at the ms scale); the event
+engine runs once (it is minutes at large C).
 
-Also writes ``BENCH_cohort.json`` (cwd) with the raw numbers.
+Also writes ``BENCH_cohort.json`` (cwd) with the raw numbers, including
+``speedup_vs_event`` and ``speedup_vs_cohort`` for the device engine —
+the acceptance number is device >= 5x host-cohort at C=4096 on the
+FedSGD workload.
 """
 from __future__ import annotations
 
 import json
+import statistics
 import time
 
-from repro.cohort import make_simulator
+from repro.cohort import as_cohort_task, make_simulator
 from repro.configs.base import FLConfig
 from repro.core import LogRegTask
 from repro.data import make_binary_dataset
 
 COHORTS = [64, 512, 4096]
-ROUNDS = 2
-S = 8                       # iterations per round per client
-ETAS = [0.1, 0.08]
-EVENT_CAP = 4096            # largest C the event engine is timed at
+WORKLOADS = {
+    "compute_r2_s8": dict(rounds=2, iters=8, event_cap=4096),
+    "fedsgd_r8_s1": dict(rounds=8, iters=1, event_cap=512),
+}
+REPS = 3
 
 
 def _mk_task(X, y):
     return LogRegTask(X, y, l2=1.0 / len(X), sample_seed=0)
 
 
-def _time_run(sim) -> float:
+def _time_run(sim, rounds: int) -> float:
     t0 = time.time()
-    sim.run(max_rounds=ROUNDS)
+    sim.run(max_rounds=rounds, eval_every=rounds)
     return time.time() - t0
+
+
+def _median_run(mk_sim, rounds: int, reps: int = REPS) -> float:
+    return statistics.median(_time_run(mk_sim(), rounds)
+                             for _ in range(reps))
 
 
 def run():
     X, y = make_binary_dataset(2_048, 32, seed=0, noise=0.3)
-    event_cfg = FLConfig(engine="event")
-    cohort_cfg = FLConfig(engine="cohort", cohort_block=64)
-    kw = dict(sizes_per_client=[S] * ROUNDS, round_stepsizes=ETAS,
-              d=1, seed=0)
-
-    # warm the event engine's per-chunk jits once at tiny C
-    ev_task = _mk_task(X, y)
-    _time_run(make_simulator(event_cfg, ev_task, n_clients=8, **kw))
-
     rows, report = [], {}
-    for C in COHORTS:
-        co_task = _mk_task(X, y)
-        co = make_simulator(cohort_cfg, co_task, n_clients=C, **kw)
-        _time_run(co)                       # compiles [C, D] block fns
-        # re-simulate with the warm cohort task: steady-state timing
-        co2 = make_simulator(cohort_cfg, co.ctask, n_clients=C, **kw)
-        dt_co = _time_run(co2)
-        tp_co = C * ROUNDS / dt_co
 
-        entry = {"clients": C, "rounds": ROUNDS, "iters_per_round": S,
-                 "cohort": {"sec": dt_co, "client_rounds_per_sec": tp_co}}
-        derived = f"cohort {tp_co:,.0f} cr/s"
-        if C <= EVENT_CAP:
-            dt_ev = _time_run(make_simulator(event_cfg, ev_task,
-                                             n_clients=C, **kw))
-            tp_ev = C * ROUNDS / dt_ev
-            entry["event"] = {"sec": dt_ev,
-                              "client_rounds_per_sec": tp_ev}
-            entry["speedup"] = tp_co / tp_ev
-            derived += f"; event {tp_ev:,.0f}; speedup {tp_co / tp_ev:.1f}x"
-        report[str(C)] = entry
-        rows.append((f"cohort_scale_C{C}", dt_co * 1e6, derived))
+    # warm the event engine's per-chunk jits once at tiny C; the rounds
+    # cover every chunk size the workloads use (8 and 1)
+    ev_task = _mk_task(X, y)
+    make_simulator(FLConfig(engine="event"), ev_task, n_clients=8,
+                   sizes_per_client=[8, 1], round_stepsizes=[0.1, 0.08],
+                   d=1, seed=0).run(max_rounds=2)
+
+    # ONE cohort task per C: the cohort engines' jit caches (block fns,
+    # device segment fns) live on the CohortLogRegTask, so warm runs and
+    # timed runs must share it — rebuilding it would re-compile.
+    ctasks = {C: as_cohort_task(_mk_task(X, y), C) for C in COHORTS}
+
+    for wname, wl in WORKLOADS.items():
+        rounds, iters = wl["rounds"], wl["iters"]
+        kw = dict(sizes_per_client=[iters] * rounds,
+                  round_stepsizes=[0.1] * rounds, d=1, seed=0)
+        report[wname] = {}
+        for C in COHORTS:
+            co_task = ctasks[C]
+            cr = C * rounds    # client-rounds per run
+
+            # one warm run per engine compiles [C, D] block/segment fns
+            co_cfg = FLConfig(engine="cohort", cohort_block=64)
+            dv_cfg = FLConfig(engine="device", cohort_block=64)
+            _time_run(make_simulator(co_cfg, co_task, n_clients=C, **kw),
+                      rounds)
+            _time_run(make_simulator(dv_cfg, co_task, n_clients=C, **kw),
+                      rounds)
+
+            dt_co = _median_run(
+                lambda: make_simulator(co_cfg, co_task, n_clients=C, **kw),
+                rounds)
+            dt_dv = _median_run(
+                lambda: make_simulator(dv_cfg, co_task, n_clients=C, **kw),
+                rounds)
+            tp_co, tp_dv = cr / dt_co, cr / dt_dv
+
+            entry = {
+                "clients": C, "rounds": rounds, "iters_per_round": iters,
+                "cohort": {"sec": dt_co, "client_rounds_per_sec": tp_co},
+                "device": {"sec": dt_dv, "client_rounds_per_sec": tp_dv,
+                           "speedup_vs_cohort": tp_dv / tp_co},
+            }
+            derived = (f"device {tp_dv:,.0f} cr/s; cohort {tp_co:,.0f}; "
+                       f"dev/cohort {tp_dv / tp_co:.1f}x")
+            if C <= wl["event_cap"]:
+                dt_ev = _time_run(
+                    make_simulator(FLConfig(engine="event"), ev_task,
+                                   n_clients=C, **kw), rounds)
+                tp_ev = cr / dt_ev
+                entry["event"] = {"sec": dt_ev,
+                                  "client_rounds_per_sec": tp_ev}
+                entry["cohort"]["speedup_vs_event"] = tp_co / tp_ev
+                entry["device"]["speedup_vs_event"] = tp_dv / tp_ev
+                derived += f"; dev/event {tp_dv / tp_ev:.0f}x"
+            report[wname][str(C)] = entry
+            rows.append((f"cohort_scale_{wname}_C{C}", dt_dv * 1e6,
+                         derived))
 
     with open("BENCH_cohort.json", "w") as f:
         json.dump(report, f, indent=2)

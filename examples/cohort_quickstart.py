@@ -1,12 +1,14 @@
-"""Cohort engine quickstart: the same async FL protocol, two engines.
+"""Cohort engine quickstart: the same async FL protocol, three engines.
 
 The event simulator (repro.core.simulator) steps one Python client object
 at a time off a heapq — faithful but interpreter-bound.  The cohort
 engine (repro.cohort) holds the whole population as stacked [C, D] arrays
 and advances every unblocked client in one vmapped scan per tick, so
-thousands of clients per process are practical.  With a ``sample_seed``
-task the two produce the same trajectory (d=1), which this example checks
-before racing them.
+thousands of clients per process are practical.  The device-resident
+engine goes one step further: the whole tick loop runs inside a single
+jitted ``lax.while_loop``, the host syncing only at eval boundaries.
+With a ``sample_seed`` task all three produce the same trajectory (d=1),
+which this example checks before racing them.
 
     PYTHONPATH=src python examples/cohort_quickstart.py
 """
@@ -15,7 +17,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.cohort import CohortSimulator, make_simulator
+from repro.cohort import make_simulator
 from repro.configs.base import FLConfig
 from repro.core import LogRegTask
 from repro.data import make_binary_dataset
@@ -26,7 +28,7 @@ def main():
     rounds, s, etas = 3, 16, [0.1, 0.08, 0.06]
 
     # -- agreement on a small cohort (noise off, deterministic sampling) --
-    # the engine is an FLConfig knob: same call, either implementation
+    # the engine is an FLConfig knob: same call, any implementation
     task = LogRegTask(X, y, l2=1.0 / len(X), sample_seed=0)
     kw = dict(sizes_per_client=[s] * rounds, round_stepsizes=etas,
               d=1, seed=0)
@@ -34,20 +36,29 @@ def main():
                             n_clients=8, **kw).run(max_rounds=rounds)
     res_co = make_simulator(FLConfig(engine="cohort", cohort_block=16),
                             task, n_clients=8, **kw).run(max_rounds=rounds)
+    res_dv = make_simulator(FLConfig(engine="device", cohort_block=16),
+                            task, n_clients=8, **kw).run(max_rounds=rounds)
     dw = np.abs(np.asarray(res_ev["model"]["w"])
                 - np.asarray(res_co["model"]["w"])).max()
+    dw_dev = np.abs(np.asarray(res_co["model"]["w"])
+                    - np.asarray(res_dv["model"]["w"])).max()
     print(f"[parity C=8]    rounds {res_ev['final']['round']} == "
-          f"{res_co['final']['round']}, max|dw| = {dw:.2e}")
+          f"{res_co['final']['round']} == {res_dv['final']['round']}, "
+          f"max|dw| = {dw:.2e} (cohort vs device: {dw_dev:.0e})")
 
     # -- throughput at a population the event engine can't hold ----------
     C = 1024
-    task = LogRegTask(X, y, l2=1.0 / len(X), sample_seed=0)
-    t0 = time.time()
-    res = CohortSimulator(task, n_clients=C, **kw).run(max_rounds=rounds)
-    dt = time.time() - t0
-    print(f"[cohort C={C}] rounds={res['final']['round']} "
-          f"acc={res['final']['accuracy']:.4f} "
-          f"({C * rounds / dt:,.0f} client-rounds/sec incl. jit)")
+    for engine, sim_task in (("cohort", LogRegTask(X, y, l2=1.0 / len(X),
+                                                   sample_seed=0)),
+                             ("device", LogRegTask(X, y, l2=1.0 / len(X),
+                                                   sample_seed=0))):
+        t0 = time.time()
+        res = make_simulator(FLConfig(engine=engine), sim_task,
+                             n_clients=C, **kw).run(max_rounds=rounds)
+        dt = time.time() - t0
+        print(f"[{engine} C={C}] rounds={res['final']['round']} "
+              f"acc={res['final']['accuracy']:.4f} "
+              f"({C * rounds / dt:,.0f} client-rounds/sec incl. jit)")
 
 
 if __name__ == "__main__":

@@ -1,14 +1,21 @@
-# Vectorized cohort engine: the async FL protocol (Algorithms 1-4) over a
-# batched client population — stacked [C, D] state, one vmapped scan per
-# tick, segment-sum server aggregation, fused Pallas clip+noise at round
-# completion (kernels/cohort_dp).
+# Vectorized cohort engines: the async FL protocol (Algorithms 1-4) over
+# a batched client population — stacked [C, D] state, one vmapped scan
+# per tick, segment-sum server aggregation, fused Pallas clip+noise at
+# round completion (kernels/cohort_dp).  Two implementations: the
+# host-loop engine (engine.py, Python control flow per tick) and the
+# device-resident engine (device.py, one jitted lax.while_loop, host
+# sync only at eval boundaries).
+from repro.cohort.device import DeviceCohortEngine
 from repro.cohort.engine import CohortEngine
-from repro.cohort.simulator import CohortSimulator, make_simulator
-from repro.cohort.state import BroadcastRing, CohortState, UpdateBuckets
+from repro.cohort.simulator import (CohortSimulator, DeviceCohortSimulator,
+                                    make_simulator)
+from repro.cohort.state import (BroadcastRing, CohortState,
+                                DeviceCohortState, UpdateBuckets)
 from repro.cohort.tasks import CohortLogRegTask, as_cohort_task
 
 __all__ = [
-    "CohortEngine", "CohortSimulator", "make_simulator",
-    "CohortState", "UpdateBuckets", "BroadcastRing",
+    "CohortEngine", "DeviceCohortEngine",
+    "CohortSimulator", "DeviceCohortSimulator", "make_simulator",
+    "CohortState", "DeviceCohortState", "UpdateBuckets", "BroadcastRing",
     "CohortLogRegTask", "as_cohort_task",
 ]

@@ -1,0 +1,401 @@
+"""Device-resident cohort engine: the whole tick loop as ONE jitted
+``lax.while_loop`` over an on-device ``DeviceCohortState``.
+
+``CohortEngine`` (the host-loop engine) batches the heavy [C, D] compute,
+but its per-tick control flow lives in Python: every tick costs a handful
+of separate device dispatches plus host<->device syncs of the protocol
+counters, so at scale wall clock is dominated by dispatch/sync, not by
+the hardware.  This engine moves the complete tick — server bucket
+apply, H-count merge, broadcast-cascade firing, masked ISRRECEIVE,
+credit accrual, block advance, fused clip+noise round completion — into
+a single jitted tick function iterated by ``lax.while_loop`` until the
+next eval boundary.  The host syncs exactly once per eval segment (one
+scalar read of ``server_k``).
+
+The Python-dict ``UpdateBuckets``/``BroadcastRing`` become fixed-capacity
+power-of-two ring arrays inside the state pytree (see
+``repro.cohort.state.DeviceCohortState`` for the capacity arguments),
+and the client axis of every [C, ...] block is sharded over the local
+devices via ``repro.sharding.cohort_shardings``, with the state buffer
+donated across segments.
+
+Fidelity: ticks use the same quantization and the same integer
+fixed-point credit (``state.FRAC_BITS``) as the host engine, and sample
+draws are (client, round, iteration) addressed, so with a deterministic
+latency the two cohort engines are **bit-identical**
+(tests/test_cohort_parity.py pins this three ways against the event
+simulator).  With a stochastic latency spec the device engine draws
+arrival ticks from its own jax PRNG stream — a different but equally
+admissible asynchronous schedule (same argument as the d > 1 note in
+``repro.cohort.engine``).
+
+Latency is a *spec*, not a host callable — host callables cannot cross
+into the jitted loop.  A float means that many virtual seconds
+(quantized to ticks, minimum 1); an ``(lo, hi)`` pair draws uniformly.
+The default ``(0.05, 0.1)`` matches the host engines' default
+``latency_fn`` and quantizes to the same single tick whenever
+``dt = block / max(speed) >= hi`` — the usual regime.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.cohort.state import (FRAC_BITS, DeviceCohortState,
+                                default_max_ticks, next_pow2, pad_sizes,
+                                speed_accrual)
+from repro.kernels.cohort_dp import cohort_clip_noise
+from repro.sharding import cohort_mesh, cohort_shardings
+
+
+def _quantize_latency(latency, dt: float) -> Tuple[int, int]:
+    """Latency spec -> (lo, hi) arrival-tick offsets, both >= 1."""
+    if callable(latency):
+        raise TypeError(
+            "the device-resident engine takes a latency *spec* — a float "
+            "(virtual seconds) or an (lo, hi) uniform range — not a host "
+            "callable; a Python latency_fn cannot run inside the jitted "
+            "tick loop (use engine='cohort' for host-callable latency)")
+    if latency is None:
+        latency = (0.05, 0.1)
+    if isinstance(latency, (int, float)):
+        lo = hi = float(latency)
+    else:
+        lo, hi = (float(latency[0]), float(latency[1]))
+    if not 0.0 < lo <= hi:
+        raise ValueError(f"latency spec must satisfy 0 < lo <= hi, "
+                         f"got ({lo}, {hi})")
+    # same quantization as the host engine's _latency_ticks (no epsilon
+    # fudge — a fudge would shift exact-multiple latencies by one tick
+    # and break host<->device bit parity)
+    ticks = lambda s: max(1, int(math.ceil(s / dt)))  # noqa: E731
+    # hi is an exclusive bound (mirroring lo + span * rng.random())
+    lo_t = ticks(lo)
+    hi_t = max(lo_t, ticks(np.nextafter(hi, 0.0)) if hi > lo else ticks(hi))
+    return lo_t, hi_t
+
+
+def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
+                   d_gate: int, L: int, R: int, B: int, lat_lo: int,
+                   lat_hi: int, dp_clip: float, dp_sigma: float,
+                   dp_round_clip: float, use_dp_kernel: bool,
+                   interpret: bool, seed: int):
+    """Compile the eval-boundary segment runner for one configuration.
+
+    Returns ``segment(state, etas, sizes, accrual, target_k, tick_limit)``
+    — a jitted, state-donating function that advances the protocol until
+    ``server_k >= target_k`` or the tick budget runs out.  Per-instance
+    arrays (etas, sizes, accrual) are arguments rather than closure
+    constants so fresh engine instances with the same geometry reuse the
+    compiled executable.
+    """
+    dp_on = dp_sigma > 0.0 or dp_round_clip > 0.0
+    noise_scale = dp_clip * dp_sigma
+    stochastic = lat_hi > lat_lo
+    noise_base = jax.random.PRNGKey(seed ^ 0x5EED)   # == host engine's
+    lat_base = jax.random.PRNGKey(seed ^ 0x17E4C)
+    run_block = ctask.block_body(b_stat)
+    cidx = jnp.arange(C)
+
+    def lat_ticks(t, salt):
+        """Per-client arrival offsets for the message batch (t, salt)."""
+        if not stochastic:
+            return jnp.full((C,), lat_lo, jnp.int32)
+        key = jax.random.fold_in(jax.random.fold_in(lat_base, t), salt)
+        return jax.random.randint(key, (C,), lat_lo, lat_hi + 1, jnp.int32)
+
+    def segment(st: DeviceCohortState, etas, sizes, accrual,
+                target_k, tick_limit) -> DeviceCohortState:
+
+        def tick_fn(st: DeviceCohortState) -> DeviceCohortState:
+            t = st.tick + 1
+
+            # 1) server: pop this tick's arrival bucket, merge H counts,
+            #    cascade-fire every round whose H just filled
+            slot = t & (L - 1)
+            cnt_row = st.upd_cnt[slot]                       # [R]
+            v = jnp.where(jnp.sum(cnt_row) > 0,
+                          st.v - st.upd_vec[slot], st.v)
+            upd_vec = st.upd_vec.at[slot].set(
+                jnp.zeros((D,), jnp.float32))
+            upd_cnt = st.upd_cnt.at[slot].set(jnp.zeros((R,), jnp.int32))
+            h_counts = st.h_counts + cnt_row
+
+            def casc_cond(c):
+                sk, hc = c[0], c[1]
+                return hc[sk & (R - 1)] >= C
+
+            def casc_body(c):
+                sk, hc, bc_v, bc_k, bc_at, nb = c
+                hc = hc.at[sk & (R - 1)].set(0)
+                sk = sk + 1
+                b = sk & (B - 1)
+                bc_v = bc_v.at[b].set(v)
+                bc_k = bc_k.at[b].set(sk)
+                bc_at = bc_at.at[b].set(t + lat_ticks(t, sk))
+                return (sk, hc, bc_v, bc_k, bc_at, nb + 1)
+
+            (server_k, h_counts, bc_v, bc_k, bc_at,
+             broadcasts) = lax.while_loop(
+                casc_cond, casc_body,
+                (st.server_k, h_counts, st.bc_v, st.bc_k, st.bc_at,
+                 st.broadcasts))
+
+            # 2) masked ISRRECEIVE: freshest due broadcast per client
+            #    (ascending-k sequential delivery == keep only max k);
+            #    the [C, D] gather+replace only runs on delivery ticks
+            elig = (bc_at <= t) & (bc_k[:, None] > st.k[None, :])  # [B, C]
+            eta = etas[jnp.minimum(st.i, etas.shape[0] - 1)]       # [C]
+
+            def do_deliver(_):
+                cand = jnp.where(elig, bc_k[:, None], 0)
+                best = jnp.argmax(cand, axis=0)                    # [C]
+                best_k = jnp.max(cand, axis=0)
+                take = best_k > st.k
+                w = jnp.where(take[:, None],
+                              bc_v[best] - eta[:, None] * st.U, st.w)
+                return w, jnp.where(take, best_k, st.k)
+
+            w, k = lax.cond(jnp.any(elig), do_deliver,
+                            lambda _: (st.w, st.k), None)
+
+            # 3) advance the cohort: credit accrual + one masked block
+            active = st.i < k + d_gate
+            credit = st.credit + jnp.where(active, accrual, 0)
+            s_i = sizes[cidx, jnp.minimum(st.i, sizes.shape[1] - 1)]
+            n = jnp.where(active,
+                          jnp.minimum(s_i - st.h, credit >> FRAC_BITS), 0)
+            n = jnp.maximum(n, 0)
+            credit = credit - (n << FRAC_BITS)
+            # idle ticks (everyone blocked / awaiting credit) skip the
+            # block entirely — mirrors the host engine's nmax > 0 guard
+            w, U = lax.cond(
+                jnp.any(n > 0),
+                lambda ops: run_block(*ops),
+                lambda ops: (ops[0], ops[1]),
+                (w, st.U, st.i, st.h, n, eta))
+            h = st.h + n
+
+            # 4) round completions: clip/noise, bucket scatter, advance —
+            #    all [C, D]-sized work gated on any round finishing
+            done = active & (h >= s_i)
+            messages = st.messages + jnp.sum(done.astype(jnp.int32))
+
+            def do_complete(ops):
+                w, U, upd_vec, upd_cnt = ops
+                if dp_on:
+                    nk = jax.random.fold_in(noise_base, t)
+                    noised, _ = cohort_clip_noise(
+                        U, nk, eta * done.astype(jnp.float32), done,
+                        clip=dp_round_clip, noise_scale=noise_scale,
+                        use_kernel=use_dp_kernel, interpret=interpret)
+                    # client-side consistency (Algorithm 1 line 24)
+                    w = jnp.where(done[:, None],
+                                  w + eta[:, None] * (noised - U), w)
+                    sent = noised
+                else:
+                    sent = U
+                # salt 0 = the update batch; cascade salts are sk >= 1
+                arr_slot = (t + lat_ticks(t, 0)) & (L - 1)         # [C]
+                # unrolled masked sums, NOT a scatter-add: each slot's
+                # vector must be the host engine's _weighted_sum over the
+                # full client axis (same expression, same float add
+                # order) or host<->device bit parity breaks
+                for sl in range(L):
+                    in_l = done & (arr_slot == sl)
+                    vec = jnp.sum(
+                        sent * (eta * in_l.astype(jnp.float32))[:, None],
+                        axis=0)
+                    upd_vec = upd_vec.at[sl].set(
+                        jnp.where(jnp.any(in_l), upd_vec[sl] + vec,
+                                  upd_vec[sl]))
+                oh_l = ((arr_slot[:, None] == jnp.arange(L)[None, :])
+                        & done[:, None]).astype(jnp.int32)         # [C, L]
+                oh_r = ((st.i & (R - 1))[:, None]
+                        == jnp.arange(R)[None, :]).astype(jnp.int32)
+                upd_cnt = upd_cnt + jnp.einsum("cl,cr->lr", oh_l, oh_r)
+                U = jnp.where(done[:, None], 0.0, sent)
+                return w, U, upd_vec, upd_cnt
+
+            w, U, upd_vec, upd_cnt = lax.cond(
+                jnp.any(done), do_complete, lambda ops: ops,
+                (w, U, upd_vec, upd_cnt))
+            i = jnp.where(done, st.i + 1, st.i)
+            h = jnp.where(done, 0, h)
+            credit = jnp.where(
+                done, jnp.minimum(credit, block << FRAC_BITS), credit)
+
+            return DeviceCohortState(
+                w=w, U=U, v=v, i=i, h=h, k=k, credit=credit,
+                server_k=server_k, tick=t, upd_vec=upd_vec,
+                upd_cnt=upd_cnt, h_counts=h_counts, bc_v=bc_v,
+                bc_k=bc_k, bc_at=bc_at, messages=messages,
+                broadcasts=broadcasts)
+
+        return lax.while_loop(
+            lambda s: (s.server_k < target_k) & (s.tick < tick_limit),
+            tick_fn, st)
+
+    return jax.jit(segment, donate_argnums=(0,))
+
+
+class DeviceCohortEngine:
+    """Drop-in engine with the ``CohortEngine`` constructor vocabulary,
+    minus host-callable latency (see module docstring)."""
+
+    def __init__(self, ctask, *, sizes_per_client,
+                 round_stepsizes: Sequence[float], d: int = 1,
+                 speeds: Optional[Sequence[float]] = None,
+                 latency=None, seed: int = 0, block: int = 64,
+                 dp_sigma: float = 0.0, dp_clip: float = 0.0,
+                 dp_round_clip: float = 0.0, use_dp_kernel: bool = True,
+                 interpret: bool = True):
+        self.ctask = ctask
+        C = ctask.C
+        self.C = C
+        self.D = ctask.D
+        self.d_gate = int(d)
+        self.block = int(block)
+        if (2 * self.block) << FRAC_BITS >= 2 ** 31:
+            raise ValueError(
+                f"block={block} overflows the device engine's int32 "
+                f"fixed-point credit (max {(2 ** 30 >> FRAC_BITS) - 1}); "
+                "use the host cohort engine for larger blocks")
+        self.seed = int(seed)
+        self.speeds = np.asarray(speeds if speeds is not None
+                                 else np.ones(C), np.float64)
+        assert len(self.speeds) == C
+        self.dt = self.block / float(self.speeds.max())
+        self.lat_lo, self.lat_hi = _quantize_latency(latency, self.dt)
+
+        self.sizes = pad_sizes(sizes_per_client, C)
+        self.etas = np.asarray(round_stepsizes, np.float64)
+
+        self.dp_sigma = float(dp_sigma)
+        self.dp_clip = float(dp_clip)
+        self.dp_round_clip = float(dp_round_clip)
+        self.use_dp_kernel = bool(use_dp_kernel)
+        self.interpret = bool(interpret)
+
+        # ring capacities and the static per-tick block size: n is bounded
+        # by the round size AND by the credit cap (2 * block post-accrual)
+        self.L = next_pow2(self.lat_hi + 1)
+        self.R = next_pow2(self.d_gate + 2)
+        self.B = next_pow2(self.d_gate + 2)
+        self.b_stat = next_pow2(
+            max(1, min(2 * self.block, int(self.sizes.max()))))
+
+        self.mesh = cohort_mesh()
+        self._shardings = cohort_shardings(self.mesh, C)
+        self.state = self._init_state()
+        self._etas_dev = jnp.asarray(self.etas, jnp.float32)
+        self._sizes_dev = jax.device_put(
+            jnp.asarray(self.sizes, jnp.int32), self._shardings["w"])
+        self._accrual_dev = jax.device_put(
+            jnp.asarray(speed_accrual(self.speeds, self.block), jnp.int32),
+            self._shardings["credit"])
+        self.history: List[Dict[str, float]] = []
+
+    def _init_state(self) -> DeviceCohortState:
+        C, D, L, R, B = self.C, self.D, self.L, self.R, self.B
+        v0 = jnp.asarray(self.ctask.init_flat(), jnp.float32)
+        # four distinct buffers — donation rejects aliased arguments
+        zc = lambda: jnp.zeros((C,), jnp.int32)  # noqa: E731
+        fields = dict(
+            w=jnp.tile(v0[None, :], (C, 1)),
+            U=jnp.zeros((C, D), jnp.float32),
+            v=v0, i=zc(), h=zc(), k=zc(), credit=zc(),
+            server_k=jnp.int32(0), tick=jnp.int32(0),
+            upd_vec=jnp.zeros((L, D), jnp.float32),
+            upd_cnt=jnp.zeros((L, R), jnp.int32),
+            h_counts=jnp.zeros((R,), jnp.int32),
+            bc_v=jnp.zeros((B, D), jnp.float32),
+            bc_k=jnp.zeros((B,), jnp.int32),
+            bc_at=jnp.zeros((B, C), jnp.int32),
+            messages=jnp.int32(0), broadcasts=jnp.int32(0))
+        return DeviceCohortState(**{
+            f: jax.device_put(val, self._shardings[f])
+            for f, val in fields.items()})
+
+    # -- compiled segment (cached on the cohort task, like its block fns) --
+    def _segment_fn(self):
+        key = ("device_segment", self.C, self.D, self.block, self.b_stat,
+               self.d_gate, self.L, self.R, self.B, self.lat_lo,
+               self.lat_hi, self.dp_clip, self.dp_sigma,
+               self.dp_round_clip, self.use_dp_kernel, self.interpret,
+               self.seed)
+        cache = getattr(self.ctask, "_segment_fns", None)
+        if cache is None:
+            cache = self.ctask._segment_fns = {}
+        fn = cache.get(key)
+        if fn is None:
+            fn = cache[key] = _build_segment(
+                self.ctask, C=self.C, D=self.D, block=self.block,
+                b_stat=self.b_stat, d_gate=self.d_gate, L=self.L,
+                R=self.R, B=self.B, lat_lo=self.lat_lo,
+                lat_hi=self.lat_hi, dp_clip=self.dp_clip,
+                dp_sigma=self.dp_sigma, dp_round_clip=self.dp_round_clip,
+                use_dp_kernel=self.use_dp_kernel,
+                interpret=self.interpret, seed=self.seed)
+        return fn
+
+    @property
+    def total_messages(self) -> int:
+        return int(self.state.messages)
+
+    @property
+    def total_broadcasts(self) -> int:
+        return int(self.state.broadcasts)
+
+    # -- main loop ----------------------------------------------------------
+    def run(self, *, max_rounds: int, eval_every: int = 1,
+            eval_fn: Optional[Callable] = None,
+            max_ticks: Optional[int] = None) -> Dict[str, Any]:
+        """Run until the server completes ``max_rounds`` broadcasts.
+
+        Same result schema as ``AsyncFLSimulator.run`` /
+        ``CohortEngine.run``; the device is synced once per eval segment.
+        """
+        if eval_fn is not None:
+            evals = lambda vec: eval_fn(self.ctask.unflatten(vec))  # noqa: E731
+        else:
+            evals = self.ctask.metrics
+        if max_ticks is None:
+            max_ticks = default_max_ticks(self.sizes, self.speeds,
+                                          self.block, max_rounds)
+        seg = self._segment_fn()
+        st = self.state
+        next_eval = eval_every
+        while True:
+            target = min(next_eval, max_rounds)
+            st = seg(st, self._etas_dev, self._sizes_dev,
+                     self._accrual_dev, jnp.int32(target),
+                     jnp.int32(max_ticks))
+            self.state = st
+            sk = int(st.server_k)            # the one sync per segment
+            if sk < target:
+                raise RuntimeError(
+                    f"cohort engine stalled: {int(st.tick)} ticks, "
+                    f"server_k={sk} < {max_rounds} "
+                    f"(in flight: {int(jnp.sum(st.upd_cnt))} updates, "
+                    f"{int(jnp.sum(jnp.any(st.bc_at > st.tick, axis=1)))}"
+                    f" broadcasts)")
+            if sk >= next_eval:
+                m = evals(st.v)
+                m.update(round=sk, time=int(st.tick) * self.dt,
+                         messages=int(st.messages))
+                self.history.append(m)
+                next_eval = sk + eval_every
+            if sk >= max_rounds:
+                break
+        final = evals(st.v)
+        final.update(round=sk, time=int(st.tick) * self.dt,
+                     messages=int(st.messages),
+                     broadcasts=int(st.broadcasts))
+        return {"final": final, "history": self.history,
+                "model": self.ctask.unflatten(st.v)}

@@ -39,7 +39,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cohort.state import BroadcastRing, CohortState, UpdateBuckets
+from repro.cohort.state import (FRAC_BITS, BroadcastRing, CohortState,
+                                UpdateBuckets, default_max_ticks,
+                                next_pow2, pad_sizes, speed_accrual)
 from repro.kernels.cohort_dp import cohort_clip_noise
 
 
@@ -70,13 +72,6 @@ def _add_scaled_rows(w, delta, eta, mask):
     return w + jnp.where(mask[:, None], eta[:, None] * delta, 0.0)
 
 
-def _next_pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p <<= 1
-    return p
-
-
 class CohortEngine:
     def __init__(self, ctask, *, sizes_per_client,
                  round_stepsizes: Sequence[float], d: int = 1,
@@ -96,17 +91,11 @@ class CohortEngine:
         assert len(self.speeds) == C
         self.latency_fn = latency_fn or (lambda r: 0.05 + 0.05 * r.random())
         self.dt = self.block / float(self.speeds.max())
+        # integer fixed-point credit accrual (see repro.cohort.state):
+        # keeps the tick schedule bit-identical with the device engine
+        self.accrual = speed_accrual(self.speeds, self.block)
 
-        if isinstance(sizes_per_client[0], (list, tuple)):
-            per_client = [list(s) for s in sizes_per_client]
-        else:
-            per_client = [list(sizes_per_client)] * C
-        L = max(len(s) for s in per_client)
-        sizes = np.empty((C, L), np.int64)
-        for c, s in enumerate(per_client):
-            sizes[c, :len(s)] = s
-            sizes[c, len(s):] = s[-1]            # s(i) = s[min(i, L-1)]
-        self.sizes = sizes
+        self.sizes = pad_sizes(sizes_per_client, C)
         self.etas = np.asarray(round_stepsizes, np.float64)
 
         v0 = ctask.init_flat()
@@ -115,7 +104,7 @@ class CohortEngine:
             U=jnp.zeros((C, ctask.D), jnp.float32),
             v=v0,
             i=np.zeros(C, np.int64), h=np.zeros(C, np.int64),
-            k=np.zeros(C, np.int64), credit=np.zeros(C, np.float64))
+            k=np.zeros(C, np.int64), credit=np.zeros(C, np.int64))
         self.updates = UpdateBuckets()
         self.bcasts = BroadcastRing()
 
@@ -179,19 +168,19 @@ class CohortEngine:
 
         # 3) advance the cohort: one vmapped masked block
         active = ~st.blocked(self.d_gate)
-        st.credit[active] += self.speeds[active] * self.dt
+        st.credit[active] += self.accrual[active]
         s_i = self._s_of(st.i)
-        n = np.minimum(s_i - st.h, np.floor(st.credit).astype(np.int64))
+        n = np.minimum(s_i - st.h, st.credit >> FRAC_BITS)
         n[~active] = 0
         np.maximum(n, 0, out=n)
         nmax = int(n.max())
         if nmax > 0:
-            st.credit -= n
+            st.credit -= n << FRAC_BITS
             eta = jnp.asarray(self._eta_of(st.i), jnp.float32)
             st.w, st.U = self.ctask.run_block(
                 st.w, st.U, jnp.asarray(st.i, jnp.int32),
                 jnp.asarray(st.h, jnp.int32), jnp.asarray(n, jnp.int32),
-                eta, _next_pow2(nmax))
+                eta, next_pow2(nmax))
             st.h += n
 
         # 4) round completions: clip/noise, enqueue, advance round
@@ -240,7 +229,8 @@ class CohortEngine:
 
         st.i[done] += 1
         st.h[done] = 0
-        st.credit[done] = np.minimum(st.credit[done], self.block)
+        st.credit[done] = np.minimum(st.credit[done],
+                                     self.block << FRAC_BITS)
         st.U = _zero_rows(sent, done_dev)
 
     # -- main loop ----------------------------------------------------------
@@ -257,9 +247,8 @@ class CohortEngine:
             evals = self.ctask.metrics
         st = self.state
         if max_ticks is None:
-            per_round = int(self._s_of(np.zeros(self.C, np.int64)).max()
-                            // self.block + 8)
-            max_ticks = max(1000, max_rounds * per_round * 16)
+            max_ticks = default_max_ticks(self.sizes, self.speeds,
+                                          self.block, max_rounds)
         next_eval = eval_every
         while st.server_k < max_rounds:
             if st.tick >= max_ticks:

@@ -1,17 +1,22 @@
-"""``CohortSimulator`` — drop-in batched engine behind the
-``AsyncFLSimulator`` interface.
+"""``CohortSimulator`` / ``DeviceCohortSimulator`` — drop-in batched
+engines behind the ``AsyncFLSimulator`` interface.
 
 Same constructor vocabulary and ``run()`` result schema as
 ``repro.core.simulator.AsyncFLSimulator``, so benchmarks and examples can
-switch engines via a flag (``FLConfig.engine``).  Construct it with the
+switch engines via a flag (``FLConfig.engine``).  Construct them with the
 same ``LogRegTask`` (give the task a ``sample_seed`` for bit-reproducible
 parity between engines) or with any object implementing the cohort-task
-interface (``run_block`` / ``init_flat`` / ``metrics``).
+interface (``run_block`` / ``block_body`` / ``init_flat`` / ``metrics``).
+
+The device simulator differs in one knob: network latency is a spec
+(float seconds or an ``(lo, hi)`` uniform range) instead of a host
+callable — see ``repro.cohort.device``.
 """
 from __future__ import annotations
 
 from typing import Any, Callable, Dict, Optional, Sequence
 
+from repro.cohort.device import DeviceCohortEngine
 from repro.cohort.engine import CohortEngine
 from repro.cohort.tasks import as_cohort_task
 
@@ -56,21 +61,70 @@ class CohortSimulator:
                                max_ticks=max_ticks)
 
 
+class DeviceCohortSimulator:
+    """Front-end for the device-resident engine (``repro.cohort.device``):
+    one jitted tick loop, host sync only at eval boundaries."""
+
+    def __init__(self, task, *, n_clients: int, sizes_per_client,
+                 round_stepsizes: Sequence[float], d: int = 1,
+                 speeds: Optional[Sequence[float]] = None,
+                 latency=None, seed: int = 0, block: int = 64,
+                 dp_round_clip: float = 0.0, use_dp_kernel: bool = True,
+                 interpret: bool = True):
+        self.task = task
+        self.ctask = as_cohort_task(task, n_clients, seed=seed)
+        src_task = getattr(task, "task", task)
+        self.engine = DeviceCohortEngine(
+            self.ctask, sizes_per_client=sizes_per_client,
+            round_stepsizes=round_stepsizes, d=d, speeds=speeds,
+            latency=latency, seed=seed, block=block,
+            dp_sigma=getattr(src_task, "dp_sigma", 0.0),
+            dp_clip=getattr(src_task, "dp_clip", 0.0),
+            dp_round_clip=dp_round_clip,
+            use_dp_kernel=use_dp_kernel, interpret=interpret)
+
+    @property
+    def server_model(self):
+        return self.ctask.unflatten(self.engine.state.v)
+
+    @property
+    def total_messages(self) -> int:
+        return self.engine.total_messages
+
+    @property
+    def total_broadcasts(self) -> int:
+        return self.engine.total_broadcasts
+
+    def run(self, *, max_rounds: int, eval_every: int = 1,
+            eval_fn: Optional[Callable[[Any], Dict[str, float]]] = None,
+            max_ticks: Optional[int] = None) -> Dict[str, Any]:
+        return self.engine.run(max_rounds=max_rounds,
+                               eval_every=eval_every, eval_fn=eval_fn,
+                               max_ticks=max_ticks)
+
+
 def make_simulator(engine, task, **kw):
     """Engine switch used by benchmarks/examples.
 
-    ``engine`` is ``'event' | 'cohort'``, or an ``FLConfig`` whose
-    ``engine`` / ``cohort_block`` fields select and tune the engine.
+    ``engine`` is ``'event' | 'cohort' | 'device'``, or an ``FLConfig``
+    whose ``engine`` / ``cohort_block`` fields select and tune the engine.
     """
     if not isinstance(engine, str):
         cfg = engine
         engine = cfg.engine
-        if engine == "cohort":
+        if engine in ("cohort", "device"):
             kw.setdefault("block", cfg.cohort_block)
     if engine == "cohort":
         return CohortSimulator(task, **kw)
+    if engine == "device":
+        if kw.pop("latency_fn", None) is not None:
+            raise ValueError(
+                "engine='device' takes latency=<spec>, not a host "
+                "latency_fn callable (see repro.cohort.device)")
+        return DeviceCohortSimulator(task, **kw)
     if engine == "event":
         from repro.core.simulator import AsyncFLSimulator
         kw.pop("block", None)
         return AsyncFLSimulator(task, **kw)
-    raise ValueError(f"unknown engine {engine!r} (want 'event'|'cohort')")
+    raise ValueError(
+        f"unknown engine {engine!r} (want 'event'|'cohort'|'device')")

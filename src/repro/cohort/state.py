@@ -1,11 +1,11 @@
-"""Stacked client-population state and message buffers for the cohort engine.
+"""Stacked client-population state and message buffers for the cohort engines.
 
 ``CohortState`` holds the whole population as arrays with a leading client
 axis: models and round-update accumulators live on device as flat
 ``[C, D]`` blocks (D = flattened model dim), while the small per-client
 protocol counters (round i, in-round iteration h, freshest broadcast k,
-fractional iteration credit) stay host-side — they drive Python control
-flow every tick and would cost a device sync each if they lived in jnp.
+iteration credit) stay host-side — they drive Python control flow every
+tick and would cost a device sync each if they lived in jnp.
 
 Messages are metadata + payload, split the same way:
   * ``UpdateBuckets`` — because the server only ever *sums* arriving
@@ -16,13 +16,81 @@ Messages are metadata + payload, split the same way:
   * ``BroadcastRing`` — pending (v, k) broadcasts with per-client arrival
     ticks.  The wait gate bounds how far clients lag the server, so only a
     handful are ever outstanding.
+
+``DeviceCohortState`` is the fully on-device counterpart used by the
+device-resident engine (``repro.cohort.device``): the same population
+blocks plus the counters AND the message buffers as fixed-capacity ring
+arrays, one pytree, so a single jitted tick function can advance the
+whole protocol under ``lax.while_loop`` with no host round trips.
+
+Iteration credit is integer fixed point (``FRAC_BITS`` fractional bits)
+in BOTH engines: float credit would accumulate differently in the host
+engine's float64 numpy and the device engine's float32 XLA, and a single
+divergent ``floor(credit)`` changes the tick schedule.  Integer credit
+makes the two engines' schedules — and hence, with deterministic
+latency, their trajectories — bit-identical.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, NamedTuple, Tuple
 
 import numpy as np
+
+FRAC_BITS = 16   # fixed-point fractional bits of the iteration credit
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (ring capacities, block sizes)."""
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+def speed_accrual(speeds, block: int) -> np.ndarray:
+    """Per-tick integer credit earned by each client.
+
+    dt = block / max(speed), so client c earns ``speed_c / max(speed) *
+    block`` iterations per tick; quantized to FRAC_BITS so both engines
+    accrue the exact same integers.
+    """
+    s = np.asarray(speeds, np.float64)
+    ispeed = np.maximum(1, np.round(s / s.max() * (1 << FRAC_BITS)))
+    return ispeed.astype(np.int64) * int(block)
+
+
+def pad_sizes(sizes_per_client, n_clients: int) -> np.ndarray:
+    """Per-client round sizes as a dense [C, L] array, s(i) = s[min(i, L-1)].
+
+    Shared by both cohort engines so their schedules stay identical.
+    """
+    if isinstance(sizes_per_client[0], (list, tuple)):
+        per_client = [list(s) for s in sizes_per_client]
+    else:
+        per_client = [list(sizes_per_client)] * n_clients
+    L = max(len(s) for s in per_client)
+    sizes = np.empty((n_clients, L), np.int64)
+    for c, s in enumerate(per_client):
+        sizes[c, :len(s)] = s
+        sizes[c, len(s):] = s[-1]
+    return sizes
+
+
+def default_max_ticks(sizes: np.ndarray, speeds: np.ndarray, block: int,
+                      max_rounds: int) -> int:
+    """Stall-detection tick budget, shared by both cohort engines.
+
+    dt is sized for the FASTEST client (dt = block / max speed), so the
+    slowest one earns only block * min/max credit per tick and needs
+    speed_ratio times more ticks than s/block suggests; the budget must
+    also cover the LARGEST round of an increasing schedule, not round 0.
+    """
+    speed_ratio = float(speeds.max() / speeds.min())
+    per_round = int(math.ceil(
+        int(sizes.max()) / block * speed_ratio)) + 8
+    return max(1000, max_rounds * per_round * 16)
 
 
 @dataclass
@@ -34,13 +102,51 @@ class CohortState:
     i: np.ndarray          # [C] current round (host)
     h: np.ndarray          # [C] iterations done in round i (host)
     k: np.ndarray          # [C] freshest broadcast counter seen (host)
-    credit: np.ndarray     # [C] fractional iteration credit (host)
+    credit: np.ndarray     # [C] fixed-point iteration credit (host, i64)
     server_k: int = 0      # completed-round counter (Algorithm 3's k)
     tick: int = 0
 
     def blocked(self, d: int) -> np.ndarray:
         """Wait gate, vectorized: block while i >= k + d (Supp. B.2)."""
         return self.i >= self.k + d
+
+
+class DeviceCohortState(NamedTuple):
+    """Whole protocol state on device — counters, models, message rings.
+
+    The dict-backed ``UpdateBuckets``/``BroadcastRing`` become
+    fixed-capacity power-of-two rings (capacities chosen in
+    ``repro.cohort.device``):
+
+      * update ring, L slots (L > max latency ticks): ``upd_vec[t % L]``
+        accumulates the pre-weighted [D] contribution arriving at tick t;
+        ``upd_cnt[t % L, r % R]`` counts the arriving (round r, client)
+        pairs that feed Algorithm 3's H bookkeeping.
+      * H-count ring, R slots: per-round receive counts.  The wait gate
+        keeps in-flight update rounds inside [server_k, server_k + d], so
+        R >= next_pow2(d + 2) slots never collide.
+      * broadcast ring, B slots of ((v snapshot, k), per-client arrival
+        tick): an undelivered broadcast j gates every client at rounds
+        <= j + d - 1, hence at most d + 1 distinct k outstanding and
+        B >= next_pow2(d + 2) suffices.
+    """
+    w: Any                 # [C, D] f32 client models
+    U: Any                 # [C, D] f32 round-update accumulators
+    v: Any                 # [D]    f32 server model
+    i: Any                 # [C]    i32 current round
+    h: Any                 # [C]    i32 iterations done in round i
+    k: Any                 # [C]    i32 freshest broadcast counter seen
+    credit: Any            # [C]    i32 fixed-point iteration credit
+    server_k: Any          # []     i32 completed-round counter
+    tick: Any              # []     i32
+    upd_vec: Any           # [L, D] f32 pre-weighted arrival buckets
+    upd_cnt: Any           # [L, R] i32 arriving (round, client) counts
+    h_counts: Any          # [R]    i32 Algorithm 3's H, per round mod R
+    bc_v: Any              # [B, D] f32 broadcast model snapshots
+    bc_k: Any              # [B]    i32 broadcast round counters
+    bc_at: Any             # [B, C] i32 per-client arrival ticks
+    messages: Any          # []     i32 client->server updates sent
+    broadcasts: Any        # []     i32 server broadcasts fired
 
 
 @dataclass

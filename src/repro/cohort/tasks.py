@@ -60,24 +60,45 @@ class CohortLogRegTask:
         """
         fn = self._block_fns.get(block)
         if fn is None:
-            fn = self._make_block_fn(block)
+            fn = self._block_fns[block] = jax.jit(self.block_body(block))
         return fn(w, U, i, h, n, eta)
 
-    def _make_block_fn(self, block: int):
+    def block_body(self, block: int):
+        """The ``run_block`` computation, un-jitted.
+
+        The device-resident engine embeds this directly into its jitted
+        tick function (`repro.cohort.device`), where an extra jit wrapper
+        would only add trace indirection; host callers go through
+        ``run_block``, which jits and caches per block size.
+
+        """
         X, y, l2 = self.task.X, self.task.y, self.task.l2
         clip, n_data = self.task.dp_clip, self.task.X.shape[0]
         d = self.d_feat
         base_keys = self.base_keys
 
-        def per_client(w_c, U_c, base, i_c, h_c, n_c, eta_c):
+        def sample_idx(i, h):
+            """[C, block] indices, LogRegTask.sample_indices' derivation:
+            one threefry per (client, round, iteration), index = first
+            key word mod n.  Batched OUTSIDE the SGD scan: per-step
+            hashing inside the scan serializes block tiny dispatches and
+            was ~2/3 of run_block wall time at C=4096."""
+            round_keys = jax.vmap(jax.random.fold_in)(base_keys, i)
+
+            def one(rk_c, h_c):
+                ks = jax.vmap(lambda j: jax.random.fold_in(rk_c, h_c + j))(
+                    jnp.arange(block))
+                return (ks[:, 0] % jnp.uint32(n_data)).astype(jnp.int32)
+
+            return jax.vmap(one)(round_keys, h)
+
+        def per_client(w_c, U_c, idx_c, n_c, eta_c):
             params = {"w": w_c[:d], "b": w_c[d]}
             upd = {"w": U_c[:d], "b": U_c[d]}
-            round_key = jax.random.fold_in(base, i_c)
 
-            def body(carry, j):
+            def body(carry, inp):
                 p, u = carry
-                r = jax.random.fold_in(round_key, h_c + j)
-                idx = jax.random.randint(r, (), 0, n_data)
+                idx, j = inp
                 g = jax.grad(logreg.per_example_loss)(p, X[idx], y[idx], l2)
                 if clip > 0.0:
                     g = clip_tree(g, clip)
@@ -89,17 +110,15 @@ class CohortLogRegTask:
                 return (p, u), None
 
             (params, upd), _ = jax.lax.scan(body, (params, upd),
-                                            jnp.arange(block))
+                                            (idx_c, jnp.arange(block)))
             w_out = jnp.concatenate([params["w"], params["b"][None]])
             u_out = jnp.concatenate([upd["w"], upd["b"][None]])
             return w_out, u_out
 
         def run(w, U, i, h, n, eta):
-            return jax.vmap(per_client)(w, U, base_keys, i, h, n, eta)
+            return jax.vmap(per_client)(w, U, sample_idx(i, h), n, eta)
 
-        fn = jax.jit(run)
-        self._block_fns[block] = fn
-        return fn
+        return run
 
 
 def as_cohort_task(task, n_clients: int, *, seed: int = 0):

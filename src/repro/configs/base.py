@@ -268,7 +268,9 @@ class FLConfig:
     total_grads: int = 20_000     # K
     seed: int = 0
     engine: str = "event"         # event (repro.core.simulator) |
-    #                               cohort (repro.cohort, batched)
+    #                               cohort (repro.cohort, batched, host
+    #                               tick loop) | device (repro.cohort,
+    #                               jitted on-device tick loop)
     cohort_block: int = 64        # iteration credit per cohort tick
 
 

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, List, Sequence, Tuple
 
 import jax
 
@@ -55,19 +55,29 @@ class Server:
     def eta(self, i: int) -> float:
         return self.eta_bar[min(i, len(self.eta_bar) - 1)]
 
-    def receive(self, msg: UpdateMsg) -> Optional[BroadcastMsg]:
-        """Process one queued client update; maybe emit a broadcast."""
+    def receive(self, msg: UpdateMsg) -> List[BroadcastMsg]:
+        """Process one queued client update; emit every broadcast now due.
+
+        Under message reordering a round k+1 update can arrive before the
+        last round-k update, so a single dequeue may complete *several*
+        consecutive rounds at once.  Algorithm 3's check is therefore a
+        cascade: fire round k, increment k, re-check with the already
+        banked (k+1, c) pairs, and so on.  Firing at most one broadcast
+        per dequeue would silently drop the k+1 broadcast and deadlock
+        every client blocked on the wait gate (Supp. B.2).
+        """
         eta = self.eta(msg.round_idx)
         self.v = jax.tree_util.tree_map(
             lambda v, u: v - eta * u, self.v, msg.U)
         self.H.add((msg.round_idx, msg.client_id))
         self.processed.append((msg.round_idx, msg.client_id))
-        if all((self.k, c) in self.H for c in range(self.n_clients)):
+        fired: List[BroadcastMsg] = []
+        while all((self.k, c) in self.H for c in range(self.n_clients)):
             for c in range(self.n_clients):
                 self.H.discard((self.k, c))
             self.k += 1
-            return BroadcastMsg(v=self.v, k=self.k)
-        return None
+            fired.append(BroadcastMsg(v=self.v, k=self.k))
+        return fired
 
 
 # ---------------------------------------------------------------------------

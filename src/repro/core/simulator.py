@@ -117,8 +117,7 @@ class AsyncFLSimulator:
         self._schedule_round_complete(c)   # may be a no-op if now blocked
 
     def _on_update_arrival(self, ev: _Event) -> None:
-        bcast = self.server.receive(ev.payload)
-        if bcast is not None:
+        for bcast in self.server.receive(ev.payload):
             self.total_broadcasts += 1
             for c in range(self.n):
                 lat = self.latency_fn(self.rng)

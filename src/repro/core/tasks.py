@@ -39,7 +39,10 @@ class LogRegTask:
 
     ``sample_seed``: when set, the per-iteration sample index is derived
     from ``fold_in(fold_in(fold_in(key(sample_seed), client), round), h)``
-    instead of the client's streaming rng.  The draw then depends only on
+    instead of the client's streaming rng — the index is the folded key's
+    first word mod n (one threefry application; a ``randint`` on the
+    folded key would hash a second time and the derivation dominates the
+    SGD block at cohort scale).  The draw then depends only on
     *(client, round, iteration)* — not on how the event simulator happens
     to chunk a round into ``run()`` calls — which makes trajectories
     reproducible across engines (see ``repro.cohort``).
@@ -67,24 +70,23 @@ class LogRegTask:
 
     # -- per-chunk jitted runner -------------------------------------------
     def _chunk_fn(self, n: int):
-        """Jitted n-iteration SGD chunk taking a (n,)-key array."""
+        """Jitted n-iteration SGD chunk taking a (n,)-index array."""
         if n in self._chunk_fns:
             return self._chunk_fns[n]
         X, y, l2 = self.X, self.y, self.l2
-        clip, n_data = self.dp_clip, self.X.shape[0]
+        clip = self.dp_clip
 
-        def run(w, U, eta, keys):
-            def step2(carry, r):
+        def run(w, U, eta, idx):
+            def step2(carry, ix):
                 w, U = carry
-                idx = jax.random.randint(r, (), 0, n_data)
-                g = jax.grad(logreg.per_example_loss)(w, X[idx], y[idx], l2)
+                g = jax.grad(logreg.per_example_loss)(w, X[ix], y[ix], l2)
                 if clip > 0.0:
                     g = clip_tree(g, clip)
                 U = jax.tree_util.tree_map(jnp.add, U, g)
                 w = jax.tree_util.tree_map(lambda p, gg: p - eta * gg, w, g)
                 return (w, U), None
 
-            (w, U), _ = jax.lax.scan(step2, (w, U), keys)
+            (w, U), _ = jax.lax.scan(step2, (w, U), idx)
             return w, U
 
         fn = jax.jit(run)
@@ -109,18 +111,27 @@ class LogRegTask:
         return jax.random.fold_in(jax.random.fold_in(base, client_id),
                                   round_idx)
 
+    def sample_indices(self, base, h, n: int):
+        """(client, round)-keyed indices for iterations h .. h+n-1: first
+        word of ``fold_in(base, h+j)`` mod n_data (single threefry)."""
+        keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(
+            h + jnp.arange(n))
+        return (keys[:, 0] % jnp.uint32(self.X.shape[0])).astype(jnp.int32)
+
     def run_iterations(self, w, U, *, round_idx, client_id, start_h,
                        n_iters, eta, rng):
+        n_data = self.X.shape[0]
         h = int(start_h)
         for j, c in enumerate(self._chunks(int(n_iters))):
             if self.sample_seed is not None:
                 base = self.iteration_key_base(client_id, round_idx)
-                keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(
-                    h + jnp.arange(c))
+                idx = self.sample_indices(base, h, c)
             else:
                 rng, sub = jax.random.split(rng)
                 keys = jax.random.split(sub, c)
-            w, U = self._chunk_fn(c)(w, U, jnp.float32(eta), keys)
+                idx = jax.vmap(
+                    lambda r: jax.random.randint(r, (), 0, n_data))(keys)
+            w, U = self._chunk_fn(c)(w, U, jnp.float32(eta), idx)
             h += c
         return w, U
 

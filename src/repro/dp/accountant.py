@@ -30,6 +30,14 @@ SQRT3M1_HALF = (math.sqrt(3.0) - 1.0) / 2.0
 # ---------------------------------------------------------------------------
 
 def u0_u1(r0: float, sigma: float):
+    if not 0.0 < r0 < sigma:
+        # With r0 >= sigma the denominator sigma - r0 flips sign, u0/u1 go
+        # negative, the < 1 guard in r_from_r0 passes vacuously, and a
+        # finite but meaningless r leaks into Theorem4Constants /
+        # select_parameters.  Equation (16) is only defined on 0 < r0 < σ.
+        raise ValueError(
+            f"equation (16) requires 0 < r0 < sigma; got r0={r0}, "
+            f"sigma={sigma}")
     root = math.sqrt(r0 * sigma)
     u0 = 2.0 * root / (sigma - r0)
     u1 = 2.0 * E * root / ((sigma - r0) * sigma)

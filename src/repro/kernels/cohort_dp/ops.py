@@ -34,6 +34,15 @@ def cohort_clip_noise(u, key, weights, mask, *, clip: float = 0.0,
     distributionally equivalent but not bit-matching the operand path).
     """
     C, D = u.shape
+    if interpret and not in_kernel_rng:
+        # CPU/interpret path has no 128-lane constraint: shrink the tile
+        # to the model dim's power-of-two so a small D (e.g. the paper's
+        # logreg, D=33) is not padded 4x.  The engines call this inside
+        # their jitted tick, so the saving is per completion tick.
+        p = 8
+        while p < D:
+            p <<= 1
+        d_block = min(d_block, p)
     u = u.astype(jnp.float32)
     mask_f = mask.astype(jnp.float32)
     wgt = weights.astype(jnp.float32)

@@ -1,6 +1,8 @@
 from repro.sharding.specs import (batch_spec, cache_pspecs,
-                                  client_batch_spec, param_pspecs,
-                                  param_shardings)
+                                  client_batch_spec, cohort_mesh,
+                                  cohort_pspecs, cohort_shardings,
+                                  param_pspecs, param_shardings)
 
 __all__ = ["batch_spec", "cache_pspecs", "client_batch_spec",
+           "cohort_mesh", "cohort_pspecs", "cohort_shardings",
            "param_pspecs", "param_shardings"]

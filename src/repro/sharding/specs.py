@@ -115,6 +115,43 @@ def param_shardings(mesh: Mesh, params_shape: Any) -> Any:
 
 
 # ---------------------------------------------------------------------------
+# Cohort engine: client-axis sharding for [C, D] population state
+# ---------------------------------------------------------------------------
+
+def cohort_mesh(devices=None) -> Mesh:
+    """1-D mesh over all local devices; axis ``clients`` shards the
+    population axis of the cohort engines' stacked state."""
+    devices = list(devices) if devices is not None else jax.devices()
+    return Mesh(np.asarray(devices), ("clients",))
+
+
+def cohort_pspecs(mesh: Mesh, n_clients: int) -> Dict[str, P]:
+    """Field -> PartitionSpec for ``DeviceCohortState``-shaped pytrees.
+
+    Client-axis fields ([C, ...] or [..., C]) shard over ``clients`` when
+    C is divisible by the axis size; the server model, the message rings'
+    payloads ([L, D] / [B, D]) and all scalars replicate — they are what
+    the batched server reduce touches, i.e. the FL analogue of the
+    cross-pod reduce in the LLM mapping.
+    """
+    c_ax = _fit(mesh, n_clients, "clients")
+    return {
+        "w": P(c_ax, None), "U": P(c_ax, None), "v": P(None),
+        "i": P(c_ax), "h": P(c_ax), "k": P(c_ax), "credit": P(c_ax),
+        "server_k": P(), "tick": P(),
+        "upd_vec": P(None, None), "upd_cnt": P(None, None),
+        "h_counts": P(None),
+        "bc_v": P(None, None), "bc_k": P(None), "bc_at": P(None, c_ax),
+        "messages": P(), "broadcasts": P(),
+    }
+
+
+def cohort_shardings(mesh: Mesh, n_clients: int) -> Dict[str, Any]:
+    return {f: NamedSharding(mesh, s)
+            for f, s in cohort_pspecs(mesh, n_clients).items()}
+
+
+# ---------------------------------------------------------------------------
 # Activations / batches / caches
 # ---------------------------------------------------------------------------
 

@@ -1,10 +1,12 @@
-"""Engine parity (cohort vs event simulator) and the cohort DP kernel."""
+"""Engine parity (event vs host-cohort vs device-resident) and the
+cohort DP kernel."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.cohort import CohortSimulator, as_cohort_task
+from repro.cohort import (CohortSimulator, DeviceCohortSimulator,
+                          as_cohort_task)
 from repro.configs.base import SampleSequenceConfig, StepSizeConfig
 from repro.core import (AsyncFLSimulator, LogRegTask, round_stepsizes,
                         rounds_for_budget)
@@ -43,6 +45,117 @@ def test_cohort_matches_event_sim_paper_logreg():
                                float(res_co["model"]["b"]), atol=1e-4)
     assert abs(res_ev["final"]["accuracy"]
                - res_co["final"]["accuracy"]) < 1e-3
+
+
+def test_three_way_parity_event_cohort_device_d1():
+    """Same sample-seeded task, d=1: the two cohort engines are
+    bit-identical (same tick quantization, same integer credit, same
+    deterministic 1-tick latency), and both match the event simulator's
+    trajectory to float tolerance (bucketed vs per-message server adds
+    reorder float sums)."""
+    X, y = make_binary_dataset(500, 16, seed=7, noise=0.3)
+    task = LogRegTask(X, y, l2=1.0 / len(X), sample_seed=13)
+    n_clients = 4
+    sizes = [[10, 20, 30, 40]] * n_clients
+    etas = [0.1, 0.08, 0.06, 0.05]
+    kw = dict(n_clients=n_clients, sizes_per_client=sizes,
+              round_stepsizes=etas, d=1, seed=0,
+              speeds=[1.0, 0.8, 1.2, 0.9])
+
+    res_ev = AsyncFLSimulator(task, **kw).run(max_rounds=4)
+    res_co = CohortSimulator(task, **kw).run(max_rounds=4)
+    res_dv = DeviceCohortSimulator(task, **kw).run(max_rounds=4)
+
+    assert (res_ev["final"]["round"] == res_co["final"]["round"]
+            == res_dv["final"]["round"] == 4)
+    assert (res_ev["final"]["messages"] == res_co["final"]["messages"]
+            == res_dv["final"]["messages"])
+    # cohort <-> device: bit-for-bit
+    np.testing.assert_array_equal(np.asarray(res_co["model"]["w"]),
+                                  np.asarray(res_dv["model"]["w"]))
+    assert float(res_co["model"]["b"]) == float(res_dv["model"]["b"])
+    # event <-> cohort engines: same trajectory up to summation order
+    np.testing.assert_allclose(np.asarray(res_ev["model"]["w"]),
+                               np.asarray(res_dv["model"]["w"]),
+                               atol=1e-4)
+
+
+def test_device_matches_host_cohort_bitwise_with_dp_and_gate():
+    """DP noise (fused kernel), round clip, d=2 mid-round ISRRECEIVE and
+    multi-tick latency all preserve host-cohort <-> device bit parity."""
+    X, y = make_binary_dataset(300, 12, seed=9, noise=0.3)
+    task = LogRegTask(X, y, l2=1.0 / 300, dp_clip=0.1, dp_sigma=2.0,
+                      sample_seed=21)
+    kw = dict(n_clients=5, sizes_per_client=[4, 6, 8],
+              round_stepsizes=[0.1, 0.08, 0.06], d=2, seed=3,
+              speeds=[1.0, 0.6, 1.4, 0.8, 1.1], block=4,
+              dp_round_clip=0.5)
+    # dt = 4 / 1.4; a 5-virtual-second latency spans 2 ticks
+    res_co = CohortSimulator(task, latency_fn=lambda r: 5.0, **kw).run(
+        max_rounds=3)
+    res_dv = DeviceCohortSimulator(task, latency=5.0, **kw).run(
+        max_rounds=3)
+    np.testing.assert_array_equal(np.asarray(res_co["model"]["w"]),
+                                  np.asarray(res_dv["model"]["w"]))
+    assert float(res_co["model"]["b"]) == float(res_dv["model"]["b"])
+    assert res_co["final"]["messages"] == res_dv["final"]["messages"]
+    assert res_co["final"]["broadcasts"] == res_dv["final"]["broadcasts"]
+
+
+def test_device_stochastic_latency_runs_and_converges():
+    """(lo, hi) latency range: device draws its own arrival ticks — a
+    valid async schedule; protocol completes and the loss drops."""
+    X, y = make_binary_dataset(400, 16, seed=4, noise=0.3)
+    task = LogRegTask(X, y, l2=1.0 / 400, sample_seed=3)
+    sim = DeviceCohortSimulator(
+        task, n_clients=6, sizes_per_client=[4, 5, 6, 7, 8],
+        round_stepsizes=[0.1, 0.08, 0.06, 0.05, 0.04], d=2, seed=1,
+        speeds=[1.0, 0.5, 1.5, 0.7, 1.2, 0.9], block=4,
+        latency=(2.0, 9.0))
+    loss0 = task.metrics(task.init_model())["loss"]
+    res = sim.run(max_rounds=5)
+    assert res["final"]["round"] == 5
+    assert res["final"]["loss"] < loss0
+    assert res["final"]["messages"] >= 6 * 5
+
+
+def test_device_rejects_host_latency_callable():
+    X, y = make_binary_dataset(100, 8, seed=0)
+    task = LogRegTask(X, y, sample_seed=0)
+    with pytest.raises(TypeError, match="latency"):
+        DeviceCohortSimulator(task, n_clients=2, sizes_per_client=[2],
+                              round_stepsizes=[0.1], d=1, seed=0,
+                              latency=lambda r: 0.05)
+
+
+@pytest.mark.parametrize("engine_cls", [CohortSimulator,
+                                        DeviceCohortSimulator])
+def test_heterogeneous_speed_ratio_no_spurious_stall(engine_cls):
+    """Regression: max_ticks was derived from block alone, so a speed
+    ratio >= 16 made the slowest client outlive the tick budget and
+    raised a bogus 'cohort engine stalled' RuntimeError."""
+    X, y = make_binary_dataset(200, 8, seed=5, noise=0.3)
+    task = LogRegTask(X, y, l2=1.0 / 200, sample_seed=2)
+    res = engine_cls(
+        task, n_clients=2, sizes_per_client=[8] * 3,
+        round_stepsizes=[0.1, 0.08, 0.06], d=1, seed=0,
+        speeds=[1.0, 1.0 / 512.0], block=8).run(max_rounds=3)
+    assert res["final"]["round"] == 3
+
+
+@pytest.mark.parametrize("engine_cls", [CohortSimulator,
+                                        DeviceCohortSimulator])
+def test_increasing_sizes_no_spurious_stall(engine_cls):
+    """Regression: max_ticks was derived from ROUND-0 sizes, so an
+    increasing schedule (the paper's central regime) whose later rounds
+    dwarf s_0 outlived the tick budget and raised a bogus stall error."""
+    X, y = make_binary_dataset(200, 8, seed=5, noise=0.3)
+    task = LogRegTask(X, y, l2=1.0 / 200, sample_seed=2)
+    res = engine_cls(
+        task, n_clients=2, sizes_per_client=[1, 5000],
+        round_stepsizes=[0.1, 0.05], d=1, seed=0,
+        block=4).run(max_rounds=2)
+    assert res["final"]["round"] == 2
 
 
 def test_cohort_gate_d2_runs_and_converges():

@@ -12,6 +12,9 @@ from repro.core import (AsyncFLSimulator, LogRegTask, round_stepsizes,
                         rounds_for_budget, run_sync_baseline)
 from repro.data import biased_split, make_binary_dataset, unbiased_split
 
+# whole-budget convergence runs: CI exercises these in the slow job
+pytestmark = pytest.mark.slow
+
 
 K = 8_000
 N_CLIENTS = 4

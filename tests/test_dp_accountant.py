@@ -32,6 +32,19 @@ def test_u0_u1_guard():
         r_from_r0(0.36, 1.2)   # sigma too small -> u0 >= 1
 
 
+@pytest.mark.parametrize("r0,sigma", [
+    (8.0, 8.0),     # r0 == sigma: zero denominator
+    (9.5, 8.0),     # r0 > sigma: negative denominator, u0/u1 < 0 used to
+    #                 slip past the >= 1 guard and return a bogus finite r
+    (0.0, 8.0),     # degenerate r0
+    (-0.1, 8.0),
+])
+def test_r_from_r0_rejects_r0_outside_open_interval(r0, sigma):
+    """Regression: equation (16) is only defined for 0 < r0 < sigma."""
+    with pytest.raises(ValueError, match="0 < r0 < sigma"):
+        r_from_r0(r0, sigma)
+
+
 def test_theorem4_simple_B():
     # B(p=1) = 0.5 * ((sqrt(3)-1)/2 * 3)^(2/3) = 0.53218...
     assert abs(theorem4_simple_B(1.0) - 0.5321797270231777) < 1e-12
@@ -109,6 +122,7 @@ def test_moments_matches_constant_q_regime():
     assert 0.005 < eps < 1.0
 
 
+@pytest.mark.slow
 def test_moments_increasing_beats_constant_for_same_budget():
     """Same K: increasing sizes (fewer rounds) => fewer compositions.
 

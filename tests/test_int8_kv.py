@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config, reduced
 from repro.models import init_cache, init_params, serve_step
@@ -17,6 +18,7 @@ def test_quantize_roundtrip_error_bounded():
     assert q.dtype == jnp.int8
 
 
+@pytest.mark.slow
 def test_int8_decode_matches_f32_cache():
     cfg = reduced(get_config("gemma-2b"))
     params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)

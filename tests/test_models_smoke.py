@@ -64,6 +64,7 @@ def test_decode_step_smoke(arch):
     assert diff > 0.0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["gemma-2b", "mamba2-780m", "hymba-1.5b",
                                   "qwen2-moe-a2.7b"])
 def test_decode_matches_forward(arch):
@@ -111,6 +112,7 @@ def test_sliding_window_masked_vs_chunked():
                                rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_ring_cache_decode_matches_full_cache():
     """Windowed ring decode == full cache decode with the same window."""
     cfg = dataclasses.replace(reduced(get_config("gemma-2b")),
@@ -132,6 +134,7 @@ def test_ring_cache_decode_matches_full_cache():
                                    rtol=2e-3, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_ssd_decode_matches_chunked_scan():
     """Recurrent SSM decode == full-sequence SSD on the same inputs."""
     from repro.models import ssm

@@ -19,10 +19,10 @@ def test_server_broadcasts_only_when_round_complete():
     w0 = task.init_model()
     srv = Server(w0, n_clients=3, round_stepsizes=[0.1, 0.1])
     U = task.zero_update()
-    assert srv.receive(UpdateMsg(0, 0, U)) is None
-    assert srv.receive(UpdateMsg(0, 1, U)) is None
-    b = srv.receive(UpdateMsg(0, 2, U))
-    assert b is not None and b.k == 1
+    assert srv.receive(UpdateMsg(0, 0, U)) == []
+    assert srv.receive(UpdateMsg(0, 1, U)) == []
+    bs = srv.receive(UpdateMsg(0, 2, U))
+    assert [b.k for b in bs] == [1]
 
 
 def test_server_handles_out_of_order_rounds():
@@ -31,12 +31,31 @@ def test_server_handles_out_of_order_rounds():
     w0 = task.init_model()
     srv = Server(w0, n_clients=2, round_stepsizes=[0.1] * 4)
     U = task.zero_update()
-    assert srv.receive(UpdateMsg(0, 0, U)) is None
-    assert srv.receive(UpdateMsg(1, 0, U)) is None   # client 0 ahead
-    b = srv.receive(UpdateMsg(0, 1, U))              # round 0 now complete
-    assert b is not None and b.k == 1
-    b = srv.receive(UpdateMsg(1, 1, U))              # round 1 complete
-    assert b is not None and b.k == 2
+    assert srv.receive(UpdateMsg(0, 0, U)) == []
+    assert srv.receive(UpdateMsg(1, 0, U)) == []     # client 0 ahead
+    bs = srv.receive(UpdateMsg(0, 1, U))             # round 0 now complete
+    assert [b.k for b in bs] == [1]
+    bs = srv.receive(UpdateMsg(1, 1, U))             # round 1 complete
+    assert [b.k for b in bs] == [2]
+
+
+def test_server_cascades_broadcasts_on_reordered_delivery():
+    """Regression: if round k+1's last update arrives before round k's,
+    both rounds complete on the same dequeue — the server must emit BOTH
+    broadcasts (k and k+1), else wait-gated clients deadlock forever."""
+    task = _tiny_task()
+    w0 = task.init_model()
+    srv = Server(w0, n_clients=2, round_stepsizes=[0.1] * 4)
+    U = task.zero_update()
+    assert srv.receive(UpdateMsg(0, 0, U)) == []
+    assert srv.receive(UpdateMsg(1, 0, U)) == []
+    assert srv.receive(UpdateMsg(1, 1, U)) == []     # round 1 full first
+    bs = srv.receive(UpdateMsg(0, 1, U))             # completes rounds 0 AND 1
+    assert [b.k for b in bs] == [1, 2]
+    # the cascade left H clean: a fresh round 2 still needs both clients
+    assert srv.receive(UpdateMsg(2, 0, U)) == []
+    bs = srv.receive(UpdateMsg(2, 1, U))
+    assert [b.k for b in bs] == [3]
 
 
 def test_server_applies_updates_with_round_stepsize():
@@ -131,6 +150,7 @@ def test_simulator_messages_equal_rounds_times_clients():
     assert res["final"]["broadcasts"] == 6
 
 
+@pytest.mark.slow
 def test_simulator_converges_on_logreg():
     from repro.data import make_binary_dataset
     from repro.configs.base import SampleSequenceConfig, StepSizeConfig

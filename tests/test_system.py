@@ -10,6 +10,9 @@ from repro.core.tasks import BatchModelTask
 from repro.data import FederatedBatcher
 from repro.models import init_params, train_loss
 
+# end-to-end driver runs: CI exercises these in the slow job
+pytestmark = pytest.mark.slow
+
 
 def test_fl_train_step_descends_and_matches_protocol():
     """One jitted FL round step: loss finite, params move."""
