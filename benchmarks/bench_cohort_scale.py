@@ -23,10 +23,19 @@ fresh simulators that reuse the warm task.  Cohort engines record the
 median of 3 runs (host wall clock is noisy at the ms scale); the event
 engine runs once (it is minutes at large C).
 
-Also writes ``BENCH_cohort.json`` (cwd) with the raw numbers, including
+A third, MODEL-SCALE workload drives a tiny transformer through the
+flat-params adapter (``repro.cohort.flat``): ``model_tiny_r2`` runs a
+reduced gemma-family decoder (1 layer, d_model=64, D = 86208 flat params)
+with growing rounds [1, 2] — one "iteration" is a full minibatch
+forward/backward, so throughput here measures the engines on the
+workload class the ROADMAP's LLM-scale FL scenarios use.  The event
+engine is timed at the smallest C only (per-step Python dispatch).
+
+Writes ``BENCH_cohort.json`` (cwd) with the raw numbers, including
 ``speedup_vs_event`` and ``speedup_vs_cohort`` for the device engine —
 the acceptance number is device >= 5x host-cohort at C=4096 on the
-FedSGD workload.
+FedSGD workload.  The file is merge-updated per workload key, so partial
+re-runs refresh their own entries without clobbering the rest.
 """
 from __future__ import annotations
 
@@ -44,6 +53,8 @@ WORKLOADS = {
     "compute_r2_s8": dict(rounds=2, iters=8, event_cap=4096),
     "fedsgd_r8_s1": dict(rounds=8, iters=1, event_cap=512),
 }
+MODEL_COHORTS = [16, 64]
+MODEL_EVENT_CAP = 16
 REPS = 3
 
 
@@ -60,6 +71,92 @@ def _time_run(sim, rounds: int) -> float:
 def _median_run(mk_sim, rounds: int, reps: int = REPS) -> float:
     return statistics.median(_time_run(mk_sim(), rounds)
                              for _ in range(reps))
+
+
+def _merge_write(report):
+    """Merge workload keys into BENCH_cohort.json (partial re-runs keep
+    the other workloads' numbers)."""
+    try:
+        with open("BENCH_cohort.json") as f:
+            existing = json.load(f)
+    except (FileNotFoundError, ValueError):
+        existing = {}
+    existing.update(report)
+    with open("BENCH_cohort.json", "w") as f:
+        json.dump(existing, f, indent=2)
+
+
+def run_model_scale(report=None):
+    """Model-scale workload: tiny transformer through the flat adapter."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduced
+    from repro.core import BatchModelTask
+    from repro.data import SeedAddressedBatcher
+    from repro.models import init_params
+
+    cfg = reduced(get_config("gemma-2b"), n_layers=1, d_model=64,
+                  vocab=256)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    batcher = SeedAddressedBatcher(cfg, batch_size=2, seq_len=16, seed=0)
+    mk_task = lambda: BatchModelTask(cfg, params, batcher)  # noqa: E731
+
+    rounds, sizes = 2, [1, 2]
+    kw = dict(sizes_per_client=sizes,
+              round_stepsizes=[0.1] * rounds, d=1, seed=0)
+    own_report = report is None
+    report = {} if own_report else report
+    report["model_tiny_r2"] = {}
+    rows = []
+    # warm the event task once at tiny C (its _step/_eval_loss jits are
+    # C-independent) so the timed event leg measures the engine, not XLA
+    ev_task = mk_task()
+    _time_run(make_simulator(FLConfig(engine="event"), ev_task,
+                             n_clients=2, **kw), rounds)
+    ctasks = {C: as_cohort_task(mk_task(), C) for C in MODEL_COHORTS}
+    for C in MODEL_COHORTS:
+        co_task = ctasks[C]
+        cr = C * rounds
+        co_cfg = FLConfig(engine="cohort", cohort_block=4)
+        dv_cfg = FLConfig(engine="device", cohort_block=4)
+        _time_run(make_simulator(co_cfg, co_task, n_clients=C, **kw),
+                  rounds)
+        _time_run(make_simulator(dv_cfg, co_task, n_clients=C, **kw),
+                  rounds)
+        dt_co = _median_run(
+            lambda: make_simulator(co_cfg, co_task, n_clients=C, **kw),
+            rounds)
+        dt_dv = _median_run(
+            lambda: make_simulator(dv_cfg, co_task, n_clients=C, **kw),
+            rounds)
+        tp_co, tp_dv = cr / dt_co, cr / dt_dv
+        entry = {
+            "clients": C, "rounds": rounds, "sizes": sizes,
+            "arch": cfg.arch_id, "flat_D": co_task.D,
+            "cohort": {"sec": dt_co, "client_rounds_per_sec": tp_co},
+            "device": {"sec": dt_dv, "client_rounds_per_sec": tp_dv,
+                       "speedup_vs_cohort": tp_dv / tp_co},
+        }
+        derived = (f"D={co_task.D}; device {tp_dv:,.1f} cr/s; "
+                   f"cohort {tp_co:,.1f}; dev/cohort "
+                   f"{tp_dv / tp_co:.1f}x")
+        if C <= MODEL_EVENT_CAP:
+            dt_ev = _time_run(
+                make_simulator(FLConfig(engine="event"), ev_task,
+                               n_clients=C, **kw), rounds)
+            tp_ev = cr / dt_ev
+            entry["event"] = {"sec": dt_ev,
+                              "client_rounds_per_sec": tp_ev}
+            entry["cohort"]["speedup_vs_event"] = tp_co / tp_ev
+            entry["device"]["speedup_vs_event"] = tp_dv / tp_ev
+            derived += f"; dev/event {tp_dv / tp_ev:.1f}x"
+        report["model_tiny_r2"][str(C)] = entry
+        rows.append((f"cohort_scale_model_tiny_r2_C{C}", dt_dv * 1e6,
+                     derived))
+    if own_report:
+        _merge_write(report)
+    return rows
 
 
 def run():
@@ -125,6 +222,6 @@ def run():
             rows.append((f"cohort_scale_{wname}_C{C}", dt_dv * 1e6,
                          derived))
 
-    with open("BENCH_cohort.json", "w") as f:
-        json.dump(report, f, indent=2)
+    rows += run_model_scale(report)
+    _merge_write(report)
     return rows

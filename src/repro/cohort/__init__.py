@@ -7,6 +7,7 @@
 # sync only at eval boundaries).
 from repro.cohort.device import DeviceCohortEngine
 from repro.cohort.engine import CohortEngine
+from repro.cohort.flat import CohortBatchModelTask, PyTreeFlattener
 from repro.cohort.simulator import (CohortSimulator, DeviceCohortSimulator,
                                     make_simulator)
 from repro.cohort.state import (BroadcastRing, CohortState,
@@ -17,5 +18,6 @@ __all__ = [
     "CohortEngine", "DeviceCohortEngine",
     "CohortSimulator", "DeviceCohortSimulator", "make_simulator",
     "CohortState", "DeviceCohortState", "UpdateBuckets", "BroadcastRing",
-    "CohortLogRegTask", "as_cohort_task",
+    "CohortLogRegTask", "CohortBatchModelTask", "PyTreeFlattener",
+    "as_cohort_task",
 ]

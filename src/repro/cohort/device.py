@@ -276,6 +276,8 @@ class DeviceCohortEngine:
         self.sizes = pad_sizes(sizes_per_client, C)
         self.etas = np.asarray(round_stepsizes, np.float64)
 
+        from repro.core.tasks import validate_dp_knobs
+        validate_dp_knobs(dp_clip, dp_sigma, "DeviceCohortEngine")
         self.dp_sigma = float(dp_sigma)
         self.dp_clip = float(dp_clip)
         self.dp_round_clip = float(dp_round_clip)

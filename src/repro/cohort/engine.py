@@ -111,6 +111,8 @@ class CohortEngine:
         # round-completion DP (noise_scale = clip * sigma, as in
         # LogRegTask.add_round_noise; dp_round_clip > 0 additionally clips
         # the whole round update = user-level DP)
+        from repro.core.tasks import validate_dp_knobs
+        validate_dp_knobs(dp_clip, dp_sigma, "CohortEngine")
         self.dp_sigma = float(dp_sigma)
         self.dp_clip = float(dp_clip)
         self.dp_round_clip = float(dp_round_clip)

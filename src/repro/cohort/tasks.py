@@ -16,12 +16,19 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
-from repro.core.tasks import LogRegTask, clip_tree
+from repro.core.tasks import BatchModelTask, LogRegTask, clip_tree
 from repro.models import logreg
 
 
 class CohortLogRegTask:
     """Whole-population view of ``LogRegTask`` (the paper's experiments)."""
+
+    #: compiled block fns kept, LRU (the cache was unbounded — a
+    #: long-lived task accumulated one jit per distinct block size).
+    #: The host engine requests next_pow2(nmax) <= next_pow2(2 * block)
+    #: — log2(2 * block) + 1 distinct sizes — so 16 covers every block
+    #: the engines accept without thrash; LRU keeps recurring sizes hot.
+    MAX_BLOCK_FNS = 16
 
     def __init__(self, task: LogRegTask, n_clients: int, *, seed: int = 0):
         self.task = task
@@ -58,9 +65,12 @@ class CohortLogRegTask:
         sizes.  Steps j >= n[c] are masked no-ops, so one compiled block
         size serves heterogeneous per-client counts.
         """
-        fn = self._block_fns.get(block)
+        fn = self._block_fns.pop(block, None)   # pop+reinsert: LRU order
         if fn is None:
-            fn = self._block_fns[block] = jax.jit(self.block_body(block))
+            fn = jax.jit(self.block_body(block))
+        self._block_fns[block] = fn
+        while len(self._block_fns) > self.MAX_BLOCK_FNS:
+            self._block_fns.pop(next(iter(self._block_fns)))
         return fn(w, U, i, h, n, eta)
 
     def block_body(self, block: int):
@@ -127,5 +137,8 @@ def as_cohort_task(task, n_clients: int, *, seed: int = 0):
         return task
     if isinstance(task, LogRegTask):
         return CohortLogRegTask(task, n_clients, seed=seed)
+    if isinstance(task, BatchModelTask):
+        from repro.cohort.flat import CohortBatchModelTask
+        return CohortBatchModelTask(task, n_clients, seed=seed)
     raise TypeError(f"no cohort adapter for {type(task).__name__}; "
                     "provide an object with run_block/init_flat/metrics")

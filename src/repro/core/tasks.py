@@ -34,6 +34,18 @@ def clip_tree(tree, clip: float):
     return jax.tree_util.tree_map(lambda l: l * scale, tree)
 
 
+def validate_dp_knobs(dp_clip: float, dp_sigma: float, who: str) -> None:
+    """Round noise is drawn with std dp_clip * dp_sigma (Algorithm 1
+    line 23 scales the Gaussian by the clip bound), so dp_sigma > 0 with
+    dp_clip == 0 silently produced ZERO noise — no privacy, no error.
+    Shared by the tasks and both cohort engines."""
+    if dp_sigma > 0.0 and dp_clip <= 0.0:
+        raise ValueError(
+            f"{who}: dp_sigma={dp_sigma} > 0 requires dp_clip > 0 — the "
+            "round-noise std is dp_clip * dp_sigma, so dp_clip == 0 "
+            "would add zero noise while appearing to be private")
+
+
 class LogRegTask:
     """Paper experiment task (strongly-convex / plain-convex logreg).
 
@@ -56,6 +68,7 @@ class LogRegTask:
         self.l2 = float(l2)
         self.dp_clip = float(dp_clip)
         self.dp_sigma = float(dp_sigma)
+        validate_dp_knobs(self.dp_clip, self.dp_sigma, "LogRegTask")
         self.d = d_features or self.X.shape[1]
         self.sample_seed = sample_seed
         self._chunk_fns: Dict[int, Any] = {}
@@ -168,7 +181,9 @@ class BatchModelTask:
         self.data_fn = data_fn           # (client_id, round, h, rng) -> batch
         self.dp_clip = float(dp_clip)
         self.dp_sigma = float(dp_sigma)
+        validate_dp_knobs(self.dp_clip, self.dp_sigma, "BatchModelTask")
         self.template = params_template
+        self.remat = bool(remat)
 
         def step(w, U, batch, eta):
             loss, g = jax.value_and_grad(
@@ -180,7 +195,15 @@ class BatchModelTask:
             return w, U, loss
 
         self._step = jax.jit(step)
+        self._eval_loss = jax.jit(
+            lambda p, batch: train_loss(cfg, p, batch, remat=remat))
+        self._eval_batch = None
         self.last_loss = None
+
+    def init_model(self, key=None):
+        """Default initial model: the params template (drivers that init
+        fresh params per run may still override this attribute)."""
+        return self.template
 
     def zero_update(self):
         return jax.tree_util.tree_map(
@@ -210,5 +233,20 @@ class BatchModelTask:
             w, noise)
         return w, U
 
-    def metrics(self, w):
-        return {"loss": self.last_loss}
+    def metrics(self, w) -> Dict[str, float]:
+        """Eval loss of ``w`` on a fixed probe batch.
+
+        Previously returned ``{"loss": None}`` until the first local step
+        and a *stale client-side train loss* after — the engines call
+        ``metrics`` on the SERVER model at eval boundaries, so histories
+        carried values that never reflected the evaluated params.  The
+        probe batch is the deterministic (client 0, round 0, iteration 0)
+        batch, identical across engines for the same data_fn.
+        """
+        if self._eval_batch is None:
+            self._eval_batch = self.data_fn(0, 0, 0,
+                                            jax.random.PRNGKey(0))
+        out = {"loss": float(self._eval_loss(w, self._eval_batch))}
+        if self.last_loss is not None:
+            out["last_train_loss"] = self.last_loss
+        return out

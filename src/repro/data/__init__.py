@@ -1,8 +1,10 @@
 from repro.data.convex import (biased_split, make_binary_dataset,
                                unbiased_split)
-from repro.data.federated import FederatedBatcher, client_sample_sizes
+from repro.data.federated import (FederatedBatcher, SeedAddressedBatcher,
+                                  client_sample_sizes)
 from repro.data.synthetic import TokenStream, encoder_embed_stub, make_batch
 
 __all__ = ["biased_split", "make_binary_dataset", "unbiased_split",
-           "FederatedBatcher", "client_sample_sizes", "TokenStream",
+           "FederatedBatcher", "SeedAddressedBatcher",
+           "client_sample_sizes", "TokenStream",
            "encoder_embed_stub", "make_batch"]

@@ -33,6 +33,65 @@ def client_sample_sizes(sizes: Sequence[int], p: Sequence[float], *,
     return out
 
 
+class SeedAddressedBatcher:
+    """(client, round, iteration)-addressed LM batches, jit-traceable.
+
+    ``FederatedBatcher`` builds batches host-side with numpy, which the
+    cohort engines' vmapped block cannot call.  This variant derives one
+    key per (client, round, iteration) with the exact ``fold_in`` chain
+    ``CohortLogRegTask.sample_idx`` uses —
+    ``fold_in(fold_in(fold_in(PRNGKey(seed), client), round), h)`` — and
+    produces the batch from that key in pure jnp (``batch_from_key``), so
+    the event simulator (calling this object as ``data_fn``) and the
+    cohort engines (embedding ``batch_from_key`` inside their scans) draw
+    bit-identical batches for the same (client, round, iteration),
+    regardless of how either engine chunks a round.
+
+    The token process mirrors ``TokenStream`` (orderly Markov-ish
+    sequences + 5% noise) so training loss decreases on it.
+    """
+
+    def __init__(self, cfg, *, batch_size: int, seq_len: int, seed: int = 0):
+        import jax
+        if cfg.family == "encdec":
+            raise ValueError(
+                "SeedAddressedBatcher supports decoder families only: the "
+                "encdec encoder-embedding stub is host-side numpy (use "
+                "FederatedBatcher with the event engine)")
+        self.cfg = cfg
+        self.batch_size = int(batch_size)
+        self.seq_len = int(seq_len)
+        self.seed = int(seed)
+        self.base = jax.random.PRNGKey(self.seed)
+
+    def key_for(self, client_id, round_idx: int, h: int):
+        import jax
+        k = jax.random.fold_in(self.base, client_id)
+        k = jax.random.fold_in(k, round_idx)
+        return jax.random.fold_in(k, h)
+
+    def batch_from_key(self, key):
+        """key -> {"tokens": (B, S) i32}; pure jnp, traceable in jit."""
+        import jax
+        import jax.numpy as jnp
+        V, B, S = self.cfg.vocab_size, self.batch_size, self.seq_len
+        ka, kb, ks, km, kn = jax.random.split(key, 5)
+        a = 2 * jax.random.randint(ka, (B, 1), 1, 8) + 1
+        b = jax.random.randint(kb, (B, 1), 0, V)
+        start = jax.random.randint(ks, (B, 1), 0, V)
+        t = jnp.arange(S)[None, :]
+        toks = (start + a * t + b * (t // 7)) % V
+        noise_mask = jax.random.uniform(km, (B, S)) < 0.05
+        noise = jax.random.randint(kn, (B, S), 0, V)
+        return {"tokens": jnp.where(noise_mask, noise,
+                                    toks).astype(jnp.int32)}
+
+    def __call__(self, client_id: int, round_idx: int, h: int, rng=None):
+        # rng accepted (and ignored) for data_fn-signature compatibility:
+        # addressing is purely (client, round, iteration)
+        return self.batch_from_key(self.key_for(client_id, round_idx, h))
+
+
 class FederatedBatcher:
     """Per-client LM batch producer for BatchModelTask / fl_step."""
 

@@ -71,7 +71,6 @@ def main(argv=None) -> int:
     task = BatchModelTask(cfg, params, batcher,
                           dp_clip=args.clip if args.dp else 0.0,
                           dp_sigma=args.sigma if args.dp else 0.0)
-    task.init_model = lambda key=None: params
 
     per_client = [sizes] * args.clients   # p_c uniform
     sim = AsyncFLSimulator(

@@ -1,0 +1,179 @@
+"""Cross-engine parity for MODEL-SCALE cohort tasks: the event simulator
+driving ``BatchModelTask`` vs the host ``CohortEngine`` vs the
+``DeviceCohortEngine``, all through the flat-params adapter
+(``repro.cohort.flat``) and the seed-addressed batcher.
+
+The harness that pins the adapter: eval-loss trajectories agree to tight
+tolerance across all three engines under deterministic latency,
+flatten/unflatten round-trips are bit-exact, and DP preserves
+host-cohort <-> device bit parity.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cohort import (CohortBatchModelTask, CohortSimulator,
+                          DeviceCohortSimulator, PyTreeFlattener,
+                          as_cohort_task)
+from repro.configs import get_config, reduced
+from repro.core import AsyncFLSimulator, BatchModelTask
+from repro.data import FederatedBatcher, SeedAddressedBatcher
+from repro.models import init_params
+
+
+def _tiny(n_layers=1, d_model=32, vocab=64, batch=2, seq=16, **task_kw):
+    """Tiny transformer config + a fresh BatchModelTask on it."""
+    cfg = reduced(get_config("gemma-2b"), n_layers=n_layers,
+                  d_model=d_model, vocab=vocab)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    batcher = SeedAddressedBatcher(cfg, batch_size=batch, seq_len=seq,
+                                   seed=3)
+    return cfg, params, lambda: BatchModelTask(cfg, params, batcher,
+                                               **task_kw)
+
+
+def _leaves(tree):
+    return jax.tree_util.tree_leaves(tree)
+
+
+def _assert_trees_equal(t1, t2, *, atol=0.0):
+    assert (jax.tree_util.tree_structure(t1)
+            == jax.tree_util.tree_structure(t2))
+    for a, b in zip(_leaves(t1), _leaves(t2)):
+        if atol == 0.0:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        else:
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                atol=atol, rtol=0)
+
+
+# --- flat layout ------------------------------------------------------------
+
+def test_flatten_roundtrip_bit_exact_model_params():
+    _, params, mk = _tiny()
+    ctask = as_cohort_task(mk(), 3)
+    assert isinstance(ctask, CohortBatchModelTask)
+    vec = ctask.flatten(params)
+    assert vec.dtype == jnp.float32
+    assert vec.shape == (ctask.D,)
+    assert ctask.D == sum(int(np.prod(l.shape)) for l in _leaves(params))
+    back = ctask.unflatten(vec)
+    for a, b in zip(_leaves(params), _leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+    _assert_trees_equal(params, back)
+
+
+def test_flattener_mixed_dtypes_roundtrip():
+    tree = {"a": jnp.asarray([[1.5, -2.25]], jnp.bfloat16),
+            "b": (jnp.asarray(3.0, jnp.float16),
+                  jnp.arange(5, dtype=jnp.float32))}
+    flt = PyTreeFlattener(tree)
+    assert flt.D == 2 + 1 + 5
+    back = flt.unflatten(flt.flatten(tree))
+    for a, b in zip(_leaves(tree), _leaves(back)):
+        assert a.dtype == b.dtype
+        assert bool(jnp.all(a == b))
+
+
+def test_flattener_rejects_inexact_dtypes():
+    """int/bool (and f64) leaves would silently corrupt through the f32
+    round trip (int32 above 2**24 loses bits) — rejected up front."""
+    with pytest.raises(TypeError, match="f32"):
+        PyTreeFlattener({"i": jnp.arange(3, dtype=jnp.int32)})
+    with pytest.raises(TypeError, match="f32"):
+        PyTreeFlattener({"b": jnp.zeros((2,), bool)})
+
+
+def test_adapter_requires_seed_addressed_batcher():
+    cfg, params, _ = _tiny()
+    host_batcher = FederatedBatcher(cfg, batch_size=2, seq_len=16, seed=0)
+    task = BatchModelTask(cfg, params, host_batcher)
+    with pytest.raises(TypeError, match="batch_from_key"):
+        as_cohort_task(task, 3)
+
+
+# --- trajectory parity ------------------------------------------------------
+
+KW = dict(n_clients=3, sizes_per_client=[[1, 2, 2]] * 3,
+          round_stepsizes=[0.1, 0.08, 0.06], d=1, seed=0,
+          speeds=[1.0, 0.8, 1.2])
+
+
+def test_three_way_model_parity_tiny():
+    """Tiny transformer, deterministic-at-1-tick latency: eval-loss
+    trajectories agree across event / host-cohort / device engines, the
+    two cohort engines are bit-identical, and the event simulator matches
+    to float tolerance (vmapped vs per-client compute reorders float
+    ops)."""
+    _, _, mk = _tiny()
+    res_ev = AsyncFLSimulator(mk(), **KW).run(max_rounds=3)
+    res_co = CohortSimulator(mk(), block=4, **KW).run(max_rounds=3)
+    res_dv = DeviceCohortSimulator(mk(), block=4, **KW).run(max_rounds=3)
+
+    assert (res_ev["final"]["round"] == res_co["final"]["round"]
+            == res_dv["final"]["round"] == 3)
+    assert (res_ev["final"]["messages"] == res_co["final"]["messages"]
+            == res_dv["final"]["messages"])
+
+    # eval-loss trajectories (the metrics probe batch is engine-agnostic)
+    ev = [h["loss"] for h in res_ev["history"]]
+    co = [h["loss"] for h in res_co["history"]]
+    dv = [h["loss"] for h in res_dv["history"]]
+    np.testing.assert_allclose(ev, co, rtol=0, atol=5e-6)
+    np.testing.assert_allclose(co, dv, rtol=0, atol=5e-6)
+
+    # host-cohort <-> device: bit-for-bit; event <-> cohort: tolerance
+    _assert_trees_equal(res_co["model"], res_dv["model"])
+    _assert_trees_equal(res_ev["model"], res_co["model"], atol=1e-5)
+
+
+def test_device_model_dp_bit_parity_with_host_cohort():
+    """DP (per-step clip, round noise via the fused kernel, round clip)
+    and multi-tick latency preserve host-cohort <-> device bit parity on
+    the model-scale adapter."""
+    _, _, mk = _tiny(dp_clip=0.5, dp_sigma=1.0)
+    kw = dict(n_clients=3, sizes_per_client=[[1, 2]] * 3,
+              round_stepsizes=[0.1, 0.08], d=2, seed=5,
+              speeds=[1.0, 0.7, 1.3], block=2, dp_round_clip=1.0)
+    # dt = 2 / 1.3; a 4-virtual-second latency spans multiple ticks
+    res_co = CohortSimulator(mk(), latency_fn=lambda r: 4.0, **kw).run(
+        max_rounds=2)
+    res_dv = DeviceCohortSimulator(mk(), latency=4.0, **kw).run(
+        max_rounds=2)
+    _assert_trees_equal(res_co["model"], res_dv["model"])
+    assert res_co["final"]["messages"] == res_dv["final"]["messages"]
+    assert res_co["final"]["broadcasts"] == res_dv["final"]["broadcasts"]
+
+
+def test_model_dp_noise_perturbs_model():
+    _, _, mk_clean = _tiny()
+    _, _, mk_noisy = _tiny(dp_clip=0.5, dp_sigma=2.0)
+    kw = dict(n_clients=2, sizes_per_client=[[1, 1]] * 2,
+              round_stepsizes=[0.1, 0.08], d=1, seed=0, block=2)
+    m0 = CohortSimulator(mk_clean(), **kw).run(max_rounds=2)["model"]
+    m1 = CohortSimulator(mk_noisy(), **kw).run(max_rounds=2)["model"]
+    diff = max(float(jnp.max(jnp.abs(a - b)))
+               for a, b in zip(_leaves(m0), _leaves(m1)))
+    assert diff > 1e-6
+
+
+@pytest.mark.slow
+def test_three_way_model_parity_larger():
+    """Larger config (2 layers, d_model=64, vocab=256, 4 clients,
+    heterogeneous growing rounds): same pinning as the tiny case."""
+    _, _, mk = _tiny(n_layers=2, d_model=64, vocab=256, batch=2, seq=32)
+    kw = dict(n_clients=4, sizes_per_client=[[1, 2, 3, 4]] * 4,
+              round_stepsizes=[0.1, 0.08, 0.06, 0.05], d=1, seed=0,
+              speeds=[1.0, 0.8, 1.2, 0.9])
+    res_ev = AsyncFLSimulator(mk(), **kw).run(max_rounds=4)
+    res_co = CohortSimulator(mk(), block=4, **kw).run(max_rounds=4)
+    res_dv = DeviceCohortSimulator(mk(), block=4, **kw).run(max_rounds=4)
+    assert (res_ev["final"]["round"] == res_co["final"]["round"]
+            == res_dv["final"]["round"] == 4)
+    _assert_trees_equal(res_co["model"], res_dv["model"])
+    _assert_trees_equal(res_ev["model"], res_co["model"], atol=5e-5)
+    ev = [h["loss"] for h in res_ev["history"]]
+    dv = [h["loss"] for h in res_dv["history"]]
+    np.testing.assert_allclose(ev, dv, rtol=0, atol=2e-5)

@@ -82,3 +82,98 @@ def test_dp_sgd_round_microbatched_equivalent():
                          rng=key, microbatch=8)
     np.testing.assert_allclose(np.asarray(U1["w"]), np.asarray(U2["w"]),
                                rtol=1e-5)
+
+
+# --- round-noise scale: engines and tasks agree on dp_clip * dp_sigma --------
+
+def _chi2_bounds(n: int, var: float, z: float = 5.0):
+    """Normal-approx chi-square band: sum(x^2) ~ var * (n +- z*sqrt(2n))."""
+    half = z * np.sqrt(2.0 * n)
+    return var * (n - half), var * (n + half)
+
+
+def test_cohort_round_noise_std_matches_spec():
+    """The cohort engines add round noise through ``cohort_clip_noise``
+    with noise_scale = dp_clip * dp_sigma — for both ``CohortLogRegTask``
+    and the flat-params model adapter, which share the op.  Empirical
+    per-coordinate variance over many draws sits inside the chi-square
+    band around (dp_clip * dp_sigma)^2."""
+    from repro.kernels.cohort_dp import cohort_clip_noise
+    dp_clip, dp_sigma = 0.5, 2.0
+    scale = dp_clip * dp_sigma
+    C, D, K = 8, 128, 64
+    zeros = jnp.zeros((C, D), jnp.float32)
+    wgt = jnp.ones((C,), jnp.float32)
+    mask = jnp.ones((C,), bool)
+    ss, n = 0.0, 0
+    base = jax.random.PRNGKey(7)
+    for t in range(K):
+        out, _ = cohort_clip_noise(zeros, jax.random.fold_in(base, t),
+                                   wgt, mask, clip=0.0,
+                                   noise_scale=scale)
+        ss += float(jnp.sum(out ** 2))
+        n += C * D
+    lo, hi = _chi2_bounds(n, scale ** 2)
+    assert lo <= ss <= hi, (ss, lo, hi)
+
+
+def test_task_round_noise_std_matches_cohort_path():
+    """``BatchModelTask.add_round_noise`` (the event-engine path for
+    model-scale rounds) draws with the same std dp_clip * dp_sigma as the
+    cohort engines' fused kernel path, and ``LogRegTask.add_round_noise``
+    matches too."""
+    from repro.configs import get_config, reduced
+    from repro.core import BatchModelTask, LogRegTask
+    from repro.data import make_binary_dataset
+    dp_clip, dp_sigma = 0.5, 2.0
+    var = (dp_clip * dp_sigma) ** 2
+
+    cfg = reduced(get_config("gemma-2b"), n_layers=1, d_model=32)
+    template = {"w": jnp.zeros((2048,), jnp.float32)}
+    bm = BatchModelTask(cfg, template, lambda *a: None,
+                        dp_clip=dp_clip, dp_sigma=dp_sigma)
+    X, y = make_binary_dataset(64, 255, seed=0)
+    lr = LogRegTask(X, y, dp_clip=dp_clip, dp_sigma=dp_sigma)
+
+    for task, zero_U in ((bm, bm.zero_update()), (lr, lr.zero_update())):
+        w0 = jax.tree_util.tree_map(jnp.zeros_like, zero_U)
+        ss, n = 0.0, 0
+        base = jax.random.PRNGKey(11)
+        for t in range(32):
+            _, U = task.add_round_noise(w0, zero_U, eta=0.1,
+                                        rng=jax.random.fold_in(base, t))
+            ss += sum(float(jnp.sum(l.astype(jnp.float32) ** 2))
+                      for l in jax.tree_util.tree_leaves(U))
+            n += sum(l.size for l in jax.tree_util.tree_leaves(U))
+        lo, hi = _chi2_bounds(n, var)
+        assert lo <= ss <= hi, (type(task).__name__, ss, lo, hi)
+
+
+def test_dp_sigma_without_clip_rejected():
+    """Regression: dp_sigma > 0 with dp_clip == 0 silently added ZERO
+    round noise (std = dp_clip * dp_sigma = 0) — no privacy, no error.
+    Now every entry point validates and raises."""
+    import pytest
+    from repro.cohort import CohortSimulator, DeviceCohortSimulator
+    from repro.configs import get_config, reduced
+    from repro.core import BatchModelTask, LogRegTask
+    from repro.data import make_binary_dataset
+
+    X, y = make_binary_dataset(50, 4, seed=0)
+    with pytest.raises(ValueError, match="dp_clip"):
+        LogRegTask(X, y, dp_sigma=2.0)
+    cfg = reduced(get_config("gemma-2b"), n_layers=1, d_model=32)
+    with pytest.raises(ValueError, match="dp_clip"):
+        BatchModelTask(cfg, {"w": jnp.zeros((4,))}, lambda *a: None,
+                       dp_sigma=2.0)
+    # engine-level knobs validate too (simulators forward task knobs, so
+    # hit the engines directly with an already-adapted clean task)
+    from repro.cohort import as_cohort_task
+    from repro.cohort.device import DeviceCohortEngine
+    from repro.cohort.engine import CohortEngine
+    ctask = as_cohort_task(LogRegTask(X, y, sample_seed=0), 2)
+    kw = dict(sizes_per_client=[2], round_stepsizes=[0.1], d=1, seed=0)
+    with pytest.raises(ValueError, match="dp_clip"):
+        CohortEngine(ctask, dp_sigma=2.0, **kw)
+    with pytest.raises(ValueError, match="dp_clip"):
+        DeviceCohortEngine(ctask, dp_sigma=2.0, **kw)

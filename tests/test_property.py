@@ -106,6 +106,80 @@ def test_parameter_selection_always_reduces_rounds(K_epochs, sigma):
     assert 0.0 < sel.delta <= 1.0
 
 
+# --- flat-params adapter -----------------------------------------------------
+
+_FLAT_DTYPES = [jnp.float32, jnp.bfloat16, jnp.float16]
+
+
+def _draw_tree(data, max_leaves=6):
+    """Random nested pytree of float arrays with mixed shapes/dtypes."""
+    n = data.draw(st.integers(1, max_leaves))
+    seed = data.draw(st.integers(0, 2 ** 31 - 1))
+    rng = np.random.default_rng(seed)
+    leaves = []
+    for _ in range(n):
+        shape = tuple(data.draw(
+            st.lists(st.integers(1, 5), min_size=0, max_size=3)))
+        dt = data.draw(st.sampled_from(_FLAT_DTYPES))
+        leaves.append(jnp.asarray(
+            8.0 * rng.standard_normal(shape), dt))
+    cut = (n + 1) // 2
+    return {"head": leaves[:cut], "tail": tuple(leaves[cut:])}
+
+
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_pytree_flattener_roundtrip_exact(data):
+    """Arbitrary nested trees with mixed shapes/dtypes: D is the total
+    leaf size, flatten is [D] f32, and the round trip is bit-exact
+    (f32 is a value superset of every <=32-bit float dtype)."""
+    from repro.cohort import PyTreeFlattener
+    tree = _draw_tree(data)
+    leaves = jax.tree_util.tree_leaves(tree)
+    flt = PyTreeFlattener(tree)
+    assert flt.D == sum(int(np.prod(l.shape)) for l in leaves)
+    vec = flt.flatten(tree)
+    assert vec.shape == (flt.D,) and vec.dtype == jnp.float32
+    back = flt.unflatten(vec)
+    assert (jax.tree_util.tree_structure(back)
+            == jax.tree_util.tree_structure(tree))
+    for a, b in zip(leaves, jax.tree_util.tree_leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert bool(jnp.all(a == b))
+
+
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_pytree_flattener_flat_update_matches_treewise(data):
+    """SGD in the flat layout == SGD tree-wise: flatten params and grads,
+    apply p - eta * g on the [D] vectors, unflatten — bitwise identical
+    to tree_map on f32 trees (what run_block relies on)."""
+    from repro.cohort import PyTreeFlattener
+    seed = data.draw(st.integers(0, 2 ** 31 - 1))
+    eta = data.draw(st.floats(1e-4, 1.0))
+    rng = np.random.default_rng(seed)
+    shapes = [tuple(data.draw(
+        st.lists(st.integers(1, 4), min_size=0, max_size=2)))
+        for _ in range(data.draw(st.integers(1, 4)))]
+    p = {"p": [jnp.asarray(rng.standard_normal(s), jnp.float32)
+               for s in shapes]}
+    g = {"p": [jnp.asarray(rng.standard_normal(s), jnp.float32)
+               for s in shapes]}
+    flt = PyTreeFlattener(p)
+    flat = flt.unflatten(flt.flatten(p) - jnp.float32(eta) * flt.flatten(g))
+    tree = jax.tree_util.tree_map(
+        lambda a, b: a - jnp.float32(eta) * b, p, g)
+    for a, b in zip(jax.tree_util.tree_leaves(flat),
+                    jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pytree_flattener_rejects_empty_template():
+    from repro.cohort import PyTreeFlattener
+    with pytest.raises(ValueError, match="leaf"):
+        PyTreeFlattener({"empty": ()})
+
+
 # --- MoE dispatch conservation -------------------------------------------------
 
 @given(seed=st.integers(0, 100), cf=st.floats(0.5, 2.0))
