@@ -31,6 +31,14 @@ forward/backward, so throughput here measures the engines on the
 workload class the ROADMAP's LLM-scale FL scenarios use.  The event
 engine is timed at the smallest C only (per-step Python dispatch).
 
+A fourth, SCENARIO workload (``scenario_smoke``) runs the protocol
+under ``repro.scenarios`` presets — empirical latency tables sampled by
+the alias method on the threefry chain, availability masks (diurnal
+windows / churn), and drawn fleet speeds — on the two cohort engines.
+It measures what heterogeneity costs each engine: the host engine pays
+extra [C]-sized device calls per tick, the device engine folds the same
+draws into its jitted tick at near-zero marginal dispatch.
+
 Writes ``BENCH_cohort.json`` (cwd) with the raw numbers, including
 ``speedup_vs_event`` and ``speedup_vs_cohort`` for the device engine —
 the acceptance number is device >= 5x host-cohort at C=4096 on the
@@ -55,6 +63,8 @@ WORKLOADS = {
 }
 MODEL_COHORTS = [16, 64]
 MODEL_EVENT_CAP = 16
+SCENARIO_COHORTS = [64, 512]
+SCENARIO_PRESETS = ["mobile_diurnal", "iot_straggler"]
 REPS = 3
 
 
@@ -159,6 +169,58 @@ def run_model_scale(report=None):
     return rows
 
 
+def run_scenarios(report=None):
+    """Scenario smoke workload: presets on both cohort engines.
+
+    4 rounds x 4 iters under each preset's full heterogeneity stack
+    (stochastic latency table + availability mask + drawn speeds); the
+    event engine is excluded — churn has no continuous-time form.
+    """
+    X, y = make_binary_dataset(2_048, 32, seed=0, noise=0.3)
+    rounds, iters = 4, 4
+    kw = dict(sizes_per_client=[iters] * rounds,
+              round_stepsizes=[0.1] * rounds, d=1, seed=0)
+    own_report = report is None
+    report = {} if own_report else report
+    report["scenario_smoke"] = {}
+    rows = []
+    ctasks = {C: as_cohort_task(_mk_task(X, y), C)
+              for C in SCENARIO_COHORTS}
+    for preset in SCENARIO_PRESETS:
+        report["scenario_smoke"][preset] = {}
+        for C in SCENARIO_COHORTS:
+            co_task = ctasks[C]
+            cr = C * rounds
+            co_cfg = FLConfig(engine="cohort", cohort_block=8,
+                              scenario=preset)
+            dv_cfg = FLConfig(engine="device", cohort_block=8,
+                              scenario=preset)
+            _time_run(make_simulator(co_cfg, co_task, n_clients=C, **kw),
+                      rounds)
+            _time_run(make_simulator(dv_cfg, co_task, n_clients=C, **kw),
+                      rounds)
+            dt_co = _median_run(
+                lambda: make_simulator(co_cfg, co_task, n_clients=C,
+                                       **kw), rounds)
+            dt_dv = _median_run(
+                lambda: make_simulator(dv_cfg, co_task, n_clients=C,
+                                       **kw), rounds)
+            tp_co, tp_dv = cr / dt_co, cr / dt_dv
+            report["scenario_smoke"][preset][str(C)] = {
+                "clients": C, "rounds": rounds, "iters_per_round": iters,
+                "cohort": {"sec": dt_co, "client_rounds_per_sec": tp_co},
+                "device": {"sec": dt_dv, "client_rounds_per_sec": tp_dv,
+                           "speedup_vs_cohort": tp_dv / tp_co},
+            }
+            rows.append((f"cohort_scale_scenario_{preset}_C{C}",
+                         dt_dv * 1e6,
+                         f"device {tp_dv:,.0f} cr/s; cohort {tp_co:,.0f};"
+                         f" dev/cohort {tp_dv / tp_co:.1f}x"))
+    if own_report:
+        _merge_write(report)
+    return rows
+
+
 def run():
     X, y = make_binary_dataset(2_048, 32, seed=0, noise=0.3)
     rows, report = [], {}
@@ -223,5 +285,6 @@ def run():
                          derived))
 
     rows += run_model_scale(report)
+    rows += run_scenarios(report)
     _merge_write(report)
     return rows

@@ -60,6 +60,22 @@ def main():
               f"acc={res['final']['accuracy']:.4f} "
               f"({C * rounds / dt:,.0f} client-rounds/sec incl. jit)")
 
+    # -- fleet-heterogeneity scenarios (repro.scenarios) -----------------
+    # one FLConfig knob swaps the whole network model: empirical latency
+    # table (alias-sampled inside the jitted tick loop), availability
+    # windows/churn, drawn fleet speeds.  Virtual completion time shows
+    # what stragglers and off-windows cost the asynchronous protocol.
+    C = 256
+    for preset in ("uniform", "mobile_diurnal", "iot_straggler"):
+        sim_task = LogRegTask(X, y, l2=1.0 / len(X), sample_seed=0)
+        res = make_simulator(
+            FLConfig(engine="device", cohort_block=16, scenario=preset),
+            sim_task, n_clients=C, **kw).run(max_rounds=rounds)
+        print(f"[scenario {preset:>15} C={C}] "
+              f"rounds={res['final']['round']} "
+              f"virtual_time={res['final']['time']:,.0f}s "
+              f"messages={res['final']['messages']}")
+
 
 if __name__ == "__main__":
     main()

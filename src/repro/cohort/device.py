@@ -21,25 +21,30 @@ donated across segments.
 
 Fidelity: ticks use the same quantization and the same integer
 fixed-point credit (``state.FRAC_BITS``) as the host engine, and sample
-draws are (client, round, iteration) addressed, so with a deterministic
-latency the two cohort engines are **bit-identical**
+draws are (client, round, iteration) addressed, so the two cohort
+engines are **bit-identical** — under deterministic latency
 (tests/test_cohort_parity.py pins this three ways against the event
-simulator).  With a stochastic latency spec the device engine draws
-arrival ticks from its own jax PRNG stream — a different but equally
-admissible asynchronous schedule (same argument as the d > 1 note in
-``repro.cohort.engine``).
+simulator) and under stochastic scenarios (tests/test_scenarios.py),
+whose latency/availability draws are message-addressed on the shared
+threefry chain rather than consumed from a sequential stream.
 
-Latency is a *spec*, not a host callable — host callables cannot cross
-into the jitted loop.  A float means that many virtual seconds
-(quantized to ticks, minimum 1); an ``(lo, hi)`` pair draws uniformly.
-The default ``(0.05, 0.1)`` matches the host engines' default
-``latency_fn`` and quantizes to the same single tick whenever
-``dt = block / max(speed) >= hi`` — the usual regime.
+Network and fleet heterogeneity come from a ``repro.scenarios``
+Scenario — an empirical ``LatencyTable`` (alias-method draws on the
+shared threefry chain, addressed by message identity), an availability
+model (diurnal windows / churn as pure [C]-shaped tick ops), and an
+optional speed distribution — never from a host callable, which cannot
+cross into the jitted loop.  Latency draws are (client, round) /
+(broadcast k, client) addressed, so the host-loop engine draws the
+exact same arrival ticks and host-cohort vs device stays
+**bit-identical under stochastic scenarios too** (the legacy ``latency``
+spec — float seconds or an (lo, hi) range — is adapted onto the same
+machinery).  The default ``uniform`` scenario matches the host engines'
+legacy default network and quantizes to the same single tick whenever
+``dt = block / max(speed) >= 0.1`` — the usual regime.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -50,39 +55,14 @@ from repro.cohort.state import (FRAC_BITS, DeviceCohortState,
                                 default_max_ticks, next_pow2, pad_sizes,
                                 speed_accrual)
 from repro.kernels.cohort_dp import cohort_clip_noise
+from repro.scenarios import (get_scenario, legacy_latency_scenario,
+                             scenario_plan)
 from repro.sharding import cohort_mesh, cohort_shardings
 
 
-def _quantize_latency(latency, dt: float) -> Tuple[int, int]:
-    """Latency spec -> (lo, hi) arrival-tick offsets, both >= 1."""
-    if callable(latency):
-        raise TypeError(
-            "the device-resident engine takes a latency *spec* — a float "
-            "(virtual seconds) or an (lo, hi) uniform range — not a host "
-            "callable; a Python latency_fn cannot run inside the jitted "
-            "tick loop (use engine='cohort' for host-callable latency)")
-    if latency is None:
-        latency = (0.05, 0.1)
-    if isinstance(latency, (int, float)):
-        lo = hi = float(latency)
-    else:
-        lo, hi = (float(latency[0]), float(latency[1]))
-    if not 0.0 < lo <= hi:
-        raise ValueError(f"latency spec must satisfy 0 < lo <= hi, "
-                         f"got ({lo}, {hi})")
-    # same quantization as the host engine's _latency_ticks (no epsilon
-    # fudge — a fudge would shift exact-multiple latencies by one tick
-    # and break host<->device bit parity)
-    ticks = lambda s: max(1, int(math.ceil(s / dt)))  # noqa: E731
-    # hi is an exclusive bound (mirroring lo + span * rng.random())
-    lo_t = ticks(lo)
-    hi_t = max(lo_t, ticks(np.nextafter(hi, 0.0)) if hi > lo else ticks(hi))
-    return lo_t, hi_t
-
-
 def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
-                   d_gate: int, L: int, R: int, B: int, lat_lo: int,
-                   lat_hi: int, dp_clip: float, dp_sigma: float,
+                   d_gate: int, L: int, R: int, B: int, plan,
+                   dp_clip: float, dp_sigma: float,
                    dp_round_clip: float, use_dp_kernel: bool,
                    interpret: bool, seed: int):
     """Compile the eval-boundary segment runner for one configuration.
@@ -96,18 +76,13 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
     """
     dp_on = dp_sigma > 0.0 or dp_round_clip > 0.0
     noise_scale = dp_clip * dp_sigma
-    stochastic = lat_hi > lat_lo
     noise_base = jax.random.PRNGKey(seed ^ 0x5EED)   # == host engine's
-    lat_base = jax.random.PRNGKey(seed ^ 0x17E4C)
     run_block = ctask.block_body(b_stat)
     cidx = jnp.arange(C)
-
-    def lat_ticks(t, salt):
-        """Per-client arrival offsets for the message batch (t, salt)."""
-        if not stochastic:
-            return jnp.full((C,), lat_lo, jnp.int32)
-        key = jax.random.fold_in(jax.random.fold_in(lat_base, t), salt)
-        return jax.random.randint(key, (C,), lat_lo, lat_hi + 1, jnp.int32)
+    # scenario closures (repro.scenarios.ScenarioPlan): message-addressed
+    # latency-tick draws and the availability mask, pure jax ops the host
+    # engine evaluates identically — the bit-parity contract
+    avail_mask = plan.avail_mask
 
     def segment(st: DeviceCohortState, etas, sizes, accrual,
                 target_k, tick_limit) -> DeviceCohortState:
@@ -137,7 +112,7 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                 b = sk & (B - 1)
                 bc_v = bc_v.at[b].set(v)
                 bc_k = bc_k.at[b].set(sk)
-                bc_at = bc_at.at[b].set(t + lat_ticks(t, sk))
+                bc_at = bc_at.at[b].set(t + plan.broadcast_ticks(sk))
                 return (sk, hc, bc_v, bc_k, bc_at, nb + 1)
 
             (server_k, h_counts, bc_v, bc_k, bc_at,
@@ -164,8 +139,12 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
             w, k = lax.cond(jnp.any(elig), do_deliver,
                             lambda _: (st.w, st.k), None)
 
-            # 3) advance the cohort: credit accrual + one masked block
+            # 3) advance the cohort: credit accrual + one masked block.
+            #    Availability gates compute, credit AND completion — an
+            #    off client accrues nothing and sends nothing this tick.
             active = st.i < k + d_gate
+            if avail_mask is not None:
+                active = active & avail_mask(t)
             credit = st.credit + jnp.where(active, accrual, 0)
             s_i = sizes[cidx, jnp.minimum(st.i, sizes.shape[1] - 1)]
             n = jnp.where(active,
@@ -200,8 +179,9 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                     sent = noised
                 else:
                     sent = U
-                # salt 0 = the update batch; cascade salts are sk >= 1
-                arr_slot = (t + lat_ticks(t, 0)) & (L - 1)         # [C]
+                # update latency addressed by (client, round) — st.i is
+                # pre-increment, matching the host engine's draw point
+                arr_slot = (t + plan.update_ticks(st.i)) & (L - 1)  # [C]
                 # unrolled masked sums, NOT a scatter-add: each slot's
                 # vector must be the host engine's _weighted_sum over the
                 # full client axis (same expression, same float add
@@ -254,7 +234,7 @@ class DeviceCohortEngine:
                  latency=None, seed: int = 0, block: int = 64,
                  dp_sigma: float = 0.0, dp_clip: float = 0.0,
                  dp_round_clip: float = 0.0, use_dp_kernel: bool = True,
-                 interpret: bool = True):
+                 interpret: bool = True, scenario=None):
         self.ctask = ctask
         C = ctask.C
         self.C = C
@@ -267,11 +247,17 @@ class DeviceCohortEngine:
                 f"fixed-point credit (max {(2 ** 30 >> FRAC_BITS) - 1}); "
                 "use the host cohort engine for larger blocks")
         self.seed = int(seed)
+        if scenario is not None and latency is not None:
+            raise ValueError("pass either scenario= or latency=, not both")
+        scn = (get_scenario(scenario) if scenario is not None
+               else legacy_latency_scenario(latency))
+        if speeds is None:
+            speeds = scn.speeds(C, seed)
         self.speeds = np.asarray(speeds if speeds is not None
                                  else np.ones(C), np.float64)
         assert len(self.speeds) == C
         self.dt = self.block / float(self.speeds.max())
-        self.lat_lo, self.lat_hi = _quantize_latency(latency, self.dt)
+        self._plan = scenario_plan(scn, C=C, seed=self.seed, dt=self.dt)
 
         self.sizes = pad_sizes(sizes_per_client, C)
         self.etas = np.asarray(round_stepsizes, np.float64)
@@ -285,8 +271,10 @@ class DeviceCohortEngine:
         self.interpret = bool(interpret)
 
         # ring capacities and the static per-tick block size: n is bounded
-        # by the round size AND by the credit cap (2 * block post-accrual)
-        self.L = next_pow2(self.lat_hi + 1)
+        # by the round size AND by the credit cap (2 * block post-accrual).
+        # L covers the latency table's TAIL — heavy-tailed tables widen
+        # the update ring (and the unrolled bucket scatter with it).
+        self.L = next_pow2(self._plan.max_lat_ticks + 1)
         self.R = next_pow2(self.d_gate + 2)
         self.B = next_pow2(self.d_gate + 2)
         self.b_stat = next_pow2(
@@ -327,8 +315,8 @@ class DeviceCohortEngine:
     # -- compiled segment (cached on the cohort task, like its block fns) --
     def _segment_fn(self):
         key = ("device_segment", self.C, self.D, self.block, self.b_stat,
-               self.d_gate, self.L, self.R, self.B, self.lat_lo,
-               self.lat_hi, self.dp_clip, self.dp_sigma,
+               self.d_gate, self.L, self.R, self.B,
+               self._plan.fingerprint(), self.dp_clip, self.dp_sigma,
                self.dp_round_clip, self.use_dp_kernel, self.interpret,
                self.seed)
         cache = getattr(self.ctask, "_segment_fns", None)
@@ -339,8 +327,8 @@ class DeviceCohortEngine:
             fn = cache[key] = _build_segment(
                 self.ctask, C=self.C, D=self.D, block=self.block,
                 b_stat=self.b_stat, d_gate=self.d_gate, L=self.L,
-                R=self.R, B=self.B, lat_lo=self.lat_lo,
-                lat_hi=self.lat_hi, dp_clip=self.dp_clip,
+                R=self.R, B=self.B, plan=self._plan,
+                dp_clip=self.dp_clip,
                 dp_sigma=self.dp_sigma, dp_round_clip=self.dp_round_clip,
                 use_dp_kernel=self.use_dp_kernel,
                 interpret=self.interpret, seed=self.seed)
@@ -368,8 +356,10 @@ class DeviceCohortEngine:
         else:
             evals = self.ctask.metrics
         if max_ticks is None:
-            max_ticks = default_max_ticks(self.sizes, self.speeds,
-                                          self.block, max_rounds)
+            max_ticks = default_max_ticks(
+                self.sizes, self.speeds, self.block, max_rounds,
+                lat_tail_ticks=self._plan.max_lat_ticks,
+                duty=self._plan.duty)
         seg = self._segment_fn()
         st = self.state
         next_eval = eval_every

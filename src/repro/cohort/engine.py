@@ -43,6 +43,7 @@ from repro.cohort.state import (FRAC_BITS, BroadcastRing, CohortState,
                                 UpdateBuckets, default_max_ticks,
                                 next_pow2, pad_sizes, speed_accrual)
 from repro.kernels.cohort_dp import cohort_clip_noise
+from repro.scenarios import get_scenario, scenario_plan
 
 
 @jax.jit
@@ -79,18 +80,34 @@ class CohortEngine:
                  latency_fn: Optional[Callable] = None, seed: int = 0,
                  block: int = 64, dp_sigma: float = 0.0,
                  dp_clip: float = 0.0, dp_round_clip: float = 0.0,
-                 use_dp_kernel: bool = True, interpret: bool = True):
+                 use_dp_kernel: bool = True, interpret: bool = True,
+                 scenario=None):
         self.ctask = ctask
         C = ctask.C
         self.C = C
         self.d_gate = int(d)
         self.block = int(block)
         self.rng = np.random.default_rng(seed)
+        # network/heterogeneity model: a Scenario (or preset name) drives
+        # latency, availability, and — when the caller gives no explicit
+        # speeds — the fleet speed draw, all on the shared threefry chain
+        # (repro.scenarios).  An explicit latency_fn callable keeps the
+        # legacy host-side np-rng path; the two are mutually exclusive.
+        if scenario is not None and latency_fn is not None:
+            raise ValueError("pass either scenario= or latency_fn=, "
+                             "not both")
+        scn = (get_scenario(scenario) if scenario is not None
+               else None if latency_fn is not None
+               else get_scenario("uniform"))
+        if speeds is None and scn is not None:
+            speeds = scn.speeds(C, seed)
         self.speeds = np.asarray(speeds if speeds is not None
                                  else np.ones(C), np.float64)
         assert len(self.speeds) == C
         self.latency_fn = latency_fn or (lambda r: 0.05 + 0.05 * r.random())
         self.dt = self.block / float(self.speeds.max())
+        self._plan = (scenario_plan(scn, C=C, seed=seed, dt=self.dt)
+                      if scn is not None else None)
         # integer fixed-point credit accrual (see repro.cohort.state):
         # keeps the tick schedule bit-identical with the device engine
         self.accrual = speed_accrual(self.speeds, self.block)
@@ -134,8 +151,28 @@ class CohortEngine:
         return self.sizes[np.arange(self.C), cols]
 
     def _latency_ticks(self, n: int) -> np.ndarray:
+        """Legacy host-callable path only (explicit latency_fn=): a
+        Python loop over self.rng.  Scenario-driven engines draw
+        message-addressed ticks from the shared threefry chain instead
+        (one vectorized [C] device call, bit-identical to the device
+        engine) — see ``_update_ticks`` / ``_bcast_ticks``."""
         lats = np.array([self.latency_fn(self.rng) for _ in range(n)])
         return np.maximum(1, np.ceil(lats / self.dt)).astype(np.int64)
+
+    def _update_ticks(self, idx: np.ndarray, i: np.ndarray) -> np.ndarray:
+        """Arrival-tick offsets of the finishing clients ``idx``."""
+        if self._plan is not None:
+            return self._plan.host_update_ticks(i)[idx]
+        return self._latency_ticks(len(idx))
+
+    def _bcast_ticks(self, k: int) -> np.ndarray:
+        """Per-client arrival-tick offsets of broadcast ``k``."""
+        if self._plan is not None:
+            return self._plan.host_broadcast_ticks(k)
+        return self._latency_ticks(self.C)
+
+    def _avail(self, t: int) -> Optional[np.ndarray]:
+        return self._plan.host_avail(t) if self._plan is not None else None
 
     # -- one tick -----------------------------------------------------------
     def step(self) -> None:
@@ -153,7 +190,7 @@ class CohortEngine:
             del self._h_counts[st.server_k]
             st.server_k += 1
             self.total_broadcasts += 1
-            at = t + self._latency_ticks(self.C)
+            at = t + self._bcast_ticks(st.server_k)
             self.bcasts.push(st.server_k, st.v, at)
 
         # 2) deliver due broadcasts, ascending k, freshest-wins per client
@@ -168,8 +205,13 @@ class CohortEngine:
         if due:
             self.bcasts.retire(t)
 
-        # 3) advance the cohort: one vmapped masked block
+        # 3) advance the cohort: one vmapped masked block.  Availability
+        #    gates compute, credit accrual AND round completion — an off
+        #    client accrues nothing and sends nothing this tick.
         active = ~st.blocked(self.d_gate)
+        avail = self._avail(t)
+        if avail is not None:
+            active &= avail
         st.credit[active] += self.accrual[active]
         s_i = self._s_of(st.i)
         n = np.minimum(s_i - st.h, st.credit >> FRAC_BITS)
@@ -199,7 +241,7 @@ class CohortEngine:
         wgt_all = jnp.asarray(eta * done, jnp.float32)
 
         arrive = np.full(self.C, -1, np.int64)
-        arrive[idx] = st.tick + self._latency_ticks(len(idx))
+        arrive[idx] = st.tick + self._update_ticks(idx, st.i)
         groups = np.unique(arrive[idx])
 
         if self.dp_sigma > 0.0 or self.dp_round_clip > 0.0:
@@ -249,8 +291,12 @@ class CohortEngine:
             evals = self.ctask.metrics
         st = self.state
         if max_ticks is None:
+            tail = (self._plan.max_lat_ticks
+                    if self._plan is not None else 1)
+            duty = self._plan.duty if self._plan is not None else 1.0
             max_ticks = default_max_ticks(self.sizes, self.speeds,
-                                          self.block, max_rounds)
+                                          self.block, max_rounds,
+                                          lat_tail_ticks=tail, duty=duty)
         next_eval = eval_every
         while st.server_k < max_rounds:
             if st.tick >= max_ticks:

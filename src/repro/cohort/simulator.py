@@ -27,7 +27,8 @@ class CohortSimulator:
                  speeds: Optional[Sequence[float]] = None,
                  latency_fn: Optional[Callable] = None, seed: int = 0,
                  block: int = 64, dp_round_clip: float = 0.0,
-                 use_dp_kernel: bool = True, interpret: bool = True):
+                 use_dp_kernel: bool = True, interpret: bool = True,
+                 scenario=None):
         self.task = task
         self.ctask = as_cohort_task(task, n_clients, seed=seed)
         # a pre-adapted cohort task keeps DP knobs on its wrapped task
@@ -39,7 +40,8 @@ class CohortSimulator:
             dp_sigma=getattr(src_task, "dp_sigma", 0.0),
             dp_clip=getattr(src_task, "dp_clip", 0.0),
             dp_round_clip=dp_round_clip,
-            use_dp_kernel=use_dp_kernel, interpret=interpret)
+            use_dp_kernel=use_dp_kernel, interpret=interpret,
+            scenario=scenario)
 
     @property
     def server_model(self):
@@ -70,7 +72,7 @@ class DeviceCohortSimulator:
                  speeds: Optional[Sequence[float]] = None,
                  latency=None, seed: int = 0, block: int = 64,
                  dp_round_clip: float = 0.0, use_dp_kernel: bool = True,
-                 interpret: bool = True):
+                 interpret: bool = True, scenario=None):
         self.task = task
         self.ctask = as_cohort_task(task, n_clients, seed=seed)
         src_task = getattr(task, "task", task)
@@ -81,7 +83,8 @@ class DeviceCohortSimulator:
             dp_sigma=getattr(src_task, "dp_sigma", 0.0),
             dp_clip=getattr(src_task, "dp_clip", 0.0),
             dp_round_clip=dp_round_clip,
-            use_dp_kernel=use_dp_kernel, interpret=interpret)
+            use_dp_kernel=use_dp_kernel, interpret=interpret,
+            scenario=scenario)
 
     @property
     def server_model(self):
@@ -107,13 +110,17 @@ def make_simulator(engine, task, **kw):
     """Engine switch used by benchmarks/examples.
 
     ``engine`` is ``'event' | 'cohort' | 'device'``, or an ``FLConfig``
-    whose ``engine`` / ``cohort_block`` fields select and tune the engine.
+    whose ``engine`` / ``cohort_block`` / ``scenario`` fields select and
+    tune the engine.  ``scenario`` (a preset name or ``Scenario``) is
+    accepted by all three engines.
     """
     if not isinstance(engine, str):
         cfg = engine
         engine = cfg.engine
         if engine in ("cohort", "device"):
             kw.setdefault("block", cfg.cohort_block)
+        if getattr(cfg, "scenario", None) is not None:
+            kw.setdefault("scenario", cfg.scenario)
     if engine == "cohort":
         return CohortSimulator(task, **kw)
     if engine == "device":

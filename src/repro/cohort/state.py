@@ -79,17 +79,22 @@ def pad_sizes(sizes_per_client, n_clients: int) -> np.ndarray:
 
 
 def default_max_ticks(sizes: np.ndarray, speeds: np.ndarray, block: int,
-                      max_rounds: int) -> int:
+                      max_rounds: int, *, lat_tail_ticks: int = 1,
+                      duty: float = 1.0) -> int:
     """Stall-detection tick budget, shared by both cohort engines.
 
     dt is sized for the FASTEST client (dt = block / max speed), so the
     slowest one earns only block * min/max credit per tick and needs
     speed_ratio times more ticks than s/block suggests; the budget must
     also cover the LARGEST round of an increasing schedule, not round 0.
+    Scenario terms: every round waits one update + one broadcast trip,
+    so the budget carries 2x the latency table's TAIL tick count (not
+    the mean — a heavy-tailed table otherwise trips the guard), and an
+    availability duty cycle < 1 stretches every compute tick by 1/duty.
     """
     speed_ratio = float(speeds.max() / speeds.min())
-    per_round = int(math.ceil(
-        int(sizes.max()) / block * speed_ratio)) + 8
+    compute = int(sizes.max()) / block * speed_ratio / max(duty, 1e-3)
+    per_round = int(math.ceil(compute)) + 8 + 2 * int(lat_tail_ticks)
     return max(1000, max_rounds * per_round * 16)
 
 

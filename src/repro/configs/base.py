@@ -272,6 +272,11 @@ class FLConfig:
     #                               tick loop) | device (repro.cohort,
     #                               jitted on-device tick loop)
     cohort_block: int = 64        # iteration credit per cohort tick
+    scenario: Optional[str] = None  # repro.scenarios preset name
+    #                               (uniform | mobile_diurnal |
+    #                               iot_straggler | registered); None
+    #                               keeps each engine's legacy default
+    #                               network
 
 
 @dataclass(frozen=True)

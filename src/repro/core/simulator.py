@@ -9,6 +9,16 @@ Simulates the paper's deployment regime on virtual time:
     have in a real deployment (ISRRECEIVE semantics),
   * the wait gate blocks a client that runs d rounds ahead (Supp. B.2).
 
+Heterogeneity can come from a ``repro.scenarios`` Scenario (pass
+``scenario=`` instead of ``latency_fn=``): latency is then drawn from
+the same message-addressed threefry chain the cohort engines use — the
+update from client c's round i and broadcast k's delivery to client c
+land in the same latency-table bin in every engine (here in continuous
+seconds, there quantized to ticks).  Deterministic availability models
+(diurnal windows) integrate into the lazy-advance schedule; epoch-churn
+models have no continuous-time form and are rejected — use the cohort
+engines.
+
 The simulator is the test harness for Theorem 1's consistency invariant
 and the measurement rig for rounds/communication benchmarks.
 """
@@ -43,10 +53,24 @@ class AsyncFLSimulator:
                  latency_fn: Optional[Callable[[np.random.Generator], float]]
                  = None,
                  seed: int = 0, record_invariant: bool = False,
-                 global_sizes: Optional[Sequence[int]] = None):
+                 global_sizes: Optional[Sequence[int]] = None,
+                 scenario=None):
         self.task = task
         self.n = n_clients
         self.rng = np.random.default_rng(seed)
+        self._plan = self._windows = None
+        if scenario is not None:
+            if latency_fn is not None:
+                raise ValueError("pass either scenario= or latency_fn=, "
+                                 "not both")
+            from repro.scenarios import get_scenario, scenario_plan
+            scn = get_scenario(scenario)
+            # windows() raises for availability models with no
+            # continuous-time form (e.g. tick-hash churn)
+            self._windows = scn.availability.windows(n_clients, seed)
+            self._plan = scenario_plan(scn, C=n_clients, seed=seed)
+            if speeds is None:
+                speeds = scn.speeds(n_clients, seed)
         self.speeds = list(speeds) if speeds is not None else [1.0] * n_clients
         self.latency_fn = latency_fn or (lambda r: 0.05 + 0.05 * r.random())
         self.record_invariant = record_invariant
@@ -83,13 +107,21 @@ class AsyncFLSimulator:
         cl = self.clients[c]
         if cl.blocked:
             return
-        t_done = self.now + cl.remaining_in_round() / self.speeds[c]
+        work_s = cl.remaining_in_round() / self.speeds[c]
+        if self._windows is not None:
+            t_done = self._windows.advance(c, self.now, work_s)
+        else:
+            t_done = self.now + work_s
         self._push(t_done, "round_complete", None, c)
 
     def _advance_client(self, c: int, t: float) -> None:
-        """Lazily run client c's iterations up to virtual time t."""
+        """Lazily run client c's iterations up to virtual time t (only
+        its availability-window on-time counts as compute)."""
         cl = self.clients[c]
-        dt = t - self.last_advance[c]
+        if self._windows is not None:
+            dt = self._windows.on_time(c, self.last_advance[c], t)
+        else:
+            dt = t - self.last_advance[c]
         self.last_advance[c] = t
         if cl.blocked or dt <= 0:
             return
@@ -112,16 +144,22 @@ class AsyncFLSimulator:
             cl.run(rem)
         msg = cl.finish_round()
         self.total_messages += 1
-        lat = self.latency_fn(self.rng)
+        if self._plan is not None:
+            lat = self._plan.update_latency_s(c, msg.round_idx)
+        else:
+            lat = self.latency_fn(self.rng)
         self._push(ev.time + lat, "update_arrival", msg)
         self._schedule_round_complete(c)   # may be a no-op if now blocked
 
     def _on_update_arrival(self, ev: _Event) -> None:
         for bcast in self.server.receive(ev.payload):
             self.total_broadcasts += 1
+            if self._plan is not None:
+                lats = self._plan.broadcast_latencies_s(bcast.k)
+            else:
+                lats = [self.latency_fn(self.rng) for _ in range(self.n)]
             for c in range(self.n):
-                lat = self.latency_fn(self.rng)
-                self._push(ev.time + lat, "broadcast_arrival", bcast, c)
+                self._push(ev.time + lats[c], "broadcast_arrival", bcast, c)
 
     def _on_broadcast_arrival(self, ev: _Event) -> None:
         c = ev.client_id

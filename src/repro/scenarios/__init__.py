@@ -1,0 +1,24 @@
+# Device-sampleable fleet-heterogeneity scenarios: empirical latency
+# tables (alias-method draws on the engines' threefry chain),
+# availability/churn models, long-tail speed distributions, and a
+# registry of named presets + trace ingestion.  One Scenario spec drives
+# all three engines (event, host-cohort, device-resident) — see
+# repro.scenarios.registry for the key-chain contract that keeps
+# host-cohort vs device trajectories bit-identical under stochastic
+# latency and availability.
+from repro.scenarios.availability import (AlwaysOn, Churn, Diurnal,
+                                          SpeedModel)
+from repro.scenarios.registry import (Scenario, ScenarioPlan, get_scenario,
+                                      legacy_latency_scenario,
+                                      register_scenario, scenario_from_trace,
+                                      scenario_names, scenario_plan)
+from repro.scenarios.tables import (LatencyTable, alias_sample,
+                                    implied_probs, key_uniforms)
+
+__all__ = [
+    "LatencyTable", "alias_sample", "key_uniforms", "implied_probs",
+    "AlwaysOn", "Diurnal", "Churn", "SpeedModel",
+    "Scenario", "ScenarioPlan", "scenario_plan", "get_scenario",
+    "register_scenario", "scenario_names", "scenario_from_trace",
+    "legacy_latency_scenario",
+]

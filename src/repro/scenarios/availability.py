@@ -1,0 +1,209 @@
+"""Client availability and fleet-speed models for heterogeneity scenarios.
+
+Availability models answer "is client c on at virtual time t?" and come
+in two flavors the engines care about:
+
+  * ``tick_plan(C, dt, seed)`` — a pure jax closure ``mask(t) -> bool[C]``
+    over *integer tick* arithmetic, embedded directly in the cohort
+    engines' tick loops (the host-loop engine calls the same jitted
+    expression), so host-cohort vs device availability is bit-identical.
+  * ``windows(C, seed)`` — a continuous-time accessor for the
+    discrete-event simulator (on-time integration + its inverse), only
+    for models whose windows are deterministic.  Hash-per-epoch models
+    (``Churn``) have no continuous form and are rejected by the event
+    simulator.
+
+Semantics shared by all engines: availability gates *compute and
+upload* — an off client accrues no iteration credit, takes no SGD step,
+and sends no round update (the invariant the property tests pin).
+Broadcast delivery is NOT gated: a broadcast whose arrival tick passes
+while a client is off is picked up when the client returns, which the
+freshest-wins ISRRECEIVE already models (stale ones drop out).
+
+Speed models draw the per-client iterations/second vector once at
+engine construction (``SpeedModel.draw``): long-tail Zipf fleets,
+bimodal fast/slow populations, lognormal spreads — the distributions
+Bonawitz et al. (1902.01046) report for real device populations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+AVAIL_SALT = 0xA7A1B      # availability threefry chain: seed ^ AVAIL_SALT
+PHASE_SALT = 0xD1A7       # numpy stream for diurnal phase draws
+
+
+@dataclass(frozen=True)
+class AlwaysOn:
+    """Full availability — the legacy (and default) regime."""
+    duty: float = 1.0
+    event_supported: bool = True
+
+    def tick_plan(self, C: int, dt: float, seed: int) -> None:
+        return None
+
+    def windows(self, C: int, seed: int) -> None:
+        return None
+
+
+class _DiurnalWindows:
+    """Continuous-time periodic on/off windows for the event simulator:
+    client c is on during [k·P − φ_c, k·P − φ_c + on) for integer k."""
+
+    def __init__(self, phase_s: np.ndarray, period_s: float, on_s: float):
+        self.phase_s = phase_s
+        self.period_s = float(period_s)
+        self.on_s = float(on_s)
+
+    def _cum_on(self, c: int, t: float) -> float:
+        """Cumulative on-seconds of client c over (-inf, t]."""
+        tt = t + self.phase_s[c]
+        k, r = divmod(tt, self.period_s)
+        return k * self.on_s + min(r, self.on_s)
+
+    def on_time(self, c: int, t0: float, t1: float) -> float:
+        """On-seconds inside [t0, t1]."""
+        return max(0.0, self._cum_on(c, t1) - self._cum_on(c, t0))
+
+    def advance(self, c: int, t0: float, work_s: float) -> float:
+        """Earliest t with ``on_time(c, t0, t) == work_s`` (inverse)."""
+        if work_s <= 0.0:
+            return t0
+        target = self._cum_on(c, t0) + work_s
+        k, r = divmod(target, self.on_s)
+        if r == 0.0:                  # lands exactly on a window end
+            k, r = k - 1.0, self.on_s
+        return k * self.period_s + r - self.phase_s[c]
+
+
+@dataclass(frozen=True)
+class Diurnal:
+    """Periodic on/off windows with a per-client phase: each client is on
+    for ``on_frac`` of every ``period_s`` virtual seconds, phases drawn
+    uniformly (deterministically from the engine seed) so the fleet's
+    availability rolls around the clock — the mobile diurnal pattern."""
+    period_s: float = 512.0
+    on_frac: float = 0.75
+    event_supported: bool = True
+
+    def __post_init__(self):
+        if self.period_s <= 0.0 or not 0.0 < self.on_frac <= 1.0:
+            raise ValueError("need period_s > 0 and 0 < on_frac <= 1")
+
+    @property
+    def duty(self) -> float:
+        return self.on_frac
+
+    def _phases(self, C: int, seed: int) -> np.ndarray:
+        rng = np.random.default_rng(seed ^ PHASE_SALT)
+        return rng.uniform(0.0, self.period_s, C)
+
+    def tick_plan(self, C: int, dt: float,
+                  seed: int) -> Optional[Callable]:
+        if self.on_frac >= 1.0:
+            return None
+        period_t = max(2, int(round(self.period_s / dt)))
+        on_t = min(period_t - 1, max(1, int(round(self.on_frac * period_t))))
+        phase_t = jnp.asarray(
+            np.floor(self._phases(C, seed) / dt).astype(np.int64)
+            % period_t, jnp.int32)
+
+        def mask(t):
+            return (t + phase_t) % period_t < on_t
+
+        return mask
+
+    def windows(self, C: int, seed: int) -> Optional[_DiurnalWindows]:
+        if self.on_frac >= 1.0:
+            return None
+        return _DiurnalWindows(self._phases(C, seed), self.period_s,
+                               self.on_frac * self.period_s)
+
+
+@dataclass(frozen=True)
+class Churn:
+    """Stochastic dropout/churn: every ``epoch_s`` virtual seconds each
+    client independently re-draws availability with probability
+    ``p_available``.  The draw is *addressed* — uniform bits from
+    ``fold_in(avail_base, epoch)`` per client — so it is a pure function
+    of (epoch, client): no Markov state in the engine, and both cohort
+    engines see identical masks.  No continuous-time form exists, so the
+    event simulator rejects it."""
+    p_available: float = 0.9
+    epoch_s: float = 64.0
+    event_supported: bool = False
+
+    def __post_init__(self):
+        if not 0.0 < self.p_available <= 1.0 or self.epoch_s <= 0.0:
+            raise ValueError("need 0 < p_available <= 1 and epoch_s > 0")
+
+    @property
+    def duty(self) -> float:
+        return self.p_available
+
+    def tick_plan(self, C: int, dt: float,
+                  seed: int) -> Optional[Callable]:
+        if self.p_available >= 1.0:
+            return None
+        epoch_t = max(1, int(round(self.epoch_s / dt)))
+        base = jax.random.PRNGKey(seed ^ AVAIL_SALT)
+        p = jnp.float32(self.p_available)
+
+        def mask(t):
+            u = jax.random.uniform(jax.random.fold_in(base, t // epoch_t),
+                                   (C,))
+            return u < p
+
+        return mask
+
+    def windows(self, C: int, seed: int):
+        raise ValueError(
+            "Churn availability is tick-hash addressed and has no "
+            "continuous-time form; the event simulator cannot run it — "
+            "use the cohort engines (engine='cohort'|'device')")
+
+
+# ---------------------------------------------------------------------------
+# Fleet speed distributions
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SpeedModel:
+    """Per-client iterations/second draw, normalized so max(speed) = 1
+    (the cohort tick dt = block / max speed stays scale-free).
+
+    kinds:
+      uniform:   U(lo, hi)
+      bimodal:   fast with prob 1 - slow_frac, else slow
+      zipf:      1 / rank^alpha over a random permutation (long tail)
+      lognormal: exp(sigma * N(0, 1))
+    """
+    kind: str = "uniform"
+    lo: float = 0.5
+    hi: float = 1.0
+    slow: float = 0.25
+    slow_frac: float = 0.3
+    alpha: float = 0.8
+    sigma: float = 0.5
+    min_speed: float = 1e-3
+
+    def draw(self, C: int, seed: int) -> np.ndarray:
+        rng = np.random.default_rng(seed ^ 0x5BEED)
+        if self.kind == "uniform":
+            s = rng.uniform(self.lo, self.hi, C)
+        elif self.kind == "bimodal":
+            s = np.where(rng.random(C) < self.slow_frac, self.slow, 1.0)
+        elif self.kind == "zipf":
+            ranks = rng.permutation(C) + 1
+            s = ranks.astype(np.float64) ** (-self.alpha)
+        elif self.kind == "lognormal":
+            s = np.exp(self.sigma * rng.standard_normal(C))
+        else:
+            raise ValueError(f"unknown speed model kind {self.kind!r}")
+        s = np.maximum(s, self.min_speed)
+        return s / s.max()

@@ -1,0 +1,312 @@
+"""Scenario specs, named presets, trace ingestion, and engine plans.
+
+A ``Scenario`` bundles the three axes of fleet heterogeneity the
+asynchronous protocol exists to survive — message latency
+(``LatencyTable``), availability (on/off windows, churn), and compute
+speed (``SpeedModel``) — into one declarative, hashable spec that all
+three engines accept (``AsyncFLSimulator``, ``CohortEngine``,
+``DeviceCohortEngine``) in place of the old ``latency_fn`` / ``(lo,
+hi)`` split.
+
+``ScenarioPlan`` is the compiled view one engine instance consumes:
+alias tables and tick quantization for a specific (C, dt, seed), plus
+the threefry key chain all engines share.  Latency draws are *message
+addressed* — update latency by (client, round), broadcast latency by
+(round k, client) — so they are pure functions of message identity, not
+of engine scheduling: the host-loop and device-resident cohort engines
+draw bit-identical arrival ticks, and the event simulator draws the
+same bins in continuous time.
+
+Key chain (distinct from the DP-noise ``seed ^ 0x5EED`` chain):
+
+    lat_base  = PRNGKey(seed ^ LAT_SALT)
+    update    (c, i): fold_in(fold_in(fold_in(lat_base, 0), c), i)
+    broadcast (k, c): fold_in(fold_in(fold_in(lat_base, 1), k), c)
+    churn     (t, c): uniform(fold_in(PRNGKey(seed ^ AVAIL_SALT),
+                                      t // epoch))[c]
+
+Presets: ``uniform`` (the legacy default network), ``mobile_diurnal``
+(lognormal latency, diurnal windows, bimodal speeds),
+``iot_straggler`` (Pareto-tail latency, churn, Zipf speeds).  Traces
+ingest via ``scenario_from_trace`` (JSON/CSV per-message seconds).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.scenarios.availability import (AlwaysOn, Churn, Diurnal,
+                                          SpeedModel)
+from repro.scenarios.tables import LatencyTable, alias_sample, key_uniforms
+
+LAT_SALT = 0x1A7E9C       # latency threefry chain: seed ^ LAT_SALT
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """Declarative heterogeneity spec shared by all engines.  Frozen and
+    hashable: the device engine keys its compiled-segment cache on it."""
+    name: str
+    latency: LatencyTable
+    availability: Any = field(default_factory=AlwaysOn)
+    speed_model: Optional[SpeedModel] = None
+
+    def speeds(self, C: int, seed: int) -> Optional[np.ndarray]:
+        if self.speed_model is None:
+            return None
+        return self.speed_model.draw(C, seed)
+
+
+class ScenarioPlan:
+    """One engine instance's compiled view of a scenario.
+
+    With ``dt`` set (cohort engines): jit-traceable tick closures —
+    ``update_ticks`` / ``broadcast_ticks`` ([C] int32 arrival offsets,
+    >= 1) and ``avail_mask`` (bool [C], or None when always-on).  The
+    host-loop engine calls the same closures jitted
+    (``host_update_ticks`` etc.), which is what makes host-cohort vs
+    device bit-identical under stochastic scenarios.
+
+    With ``dt=None`` (event simulator): continuous-seconds accessors
+    ``update_latency_s`` / ``broadcast_latency_s`` drawing the same bins
+    from the same chain, and ``windows`` for deterministic availability.
+    """
+
+    def __init__(self, scenario: Scenario, *, C: int, seed: int,
+                 dt: Optional[float] = None):
+        self.scenario = scenario
+        self.C = int(C)
+        self.seed = int(seed)
+        self.dt = dt
+        tbl = scenario.latency
+        self.K = len(tbl.values)
+        prob, alias = tbl.alias_arrays()
+        self._prob = jnp.asarray(prob)
+        self._alias = jnp.asarray(alias)
+        self._values_s = jnp.asarray(np.asarray(tbl.values, np.float32))
+        self._cidx = jnp.arange(self.C)
+
+        lat_base = jax.random.PRNGKey(seed ^ LAT_SALT)
+        self._upd_base = jax.random.fold_in(lat_base, 0)
+        self._bc_base = jax.random.fold_in(lat_base, 1)
+        self._upd_client_keys = jax.vmap(
+            jax.random.fold_in, in_axes=(None, 0))(self._upd_base,
+                                                   self._cidx)
+
+        self.duty = float(scenario.availability.duty)
+        if dt is not None:
+            tick_vals = tbl.tick_values(dt)
+            self.max_lat_ticks = int(tick_vals.max())
+            # constant fast path: a one-bin table, OR a multi-bin table
+            # whose bins all quantize to the same tick at this dt (the
+            # default uniform scenario at the usual dt >= 0.1) — skip
+            # the in-loop RNG entirely, matching the legacy engines
+            self._ticks_const = bool((tick_vals == tick_vals[0]).all())
+            self._tick0 = int(tick_vals[0])
+            self._tick_vals = jnp.asarray(tick_vals)
+            self.avail_mask = scenario.availability.tick_plan(
+                self.C, dt, seed)
+            self._host_upd = jax.jit(self.update_ticks)
+            self._host_bc = jax.jit(self.broadcast_ticks)
+            self._host_avail = (jax.jit(self.avail_mask)
+                                if self.avail_mask is not None else None)
+
+    def fingerprint(self):
+        """Hashable identity for compiled-code caches; the plan is a
+        pure function of (scenario, C, dt, seed) and the caller's cache
+        key already carries C and seed."""
+        return (self.scenario, self.dt)
+
+    # -- tick-quantized draws (cohort engines, jit-traceable) --------------
+    def _draw_ticks(self, keys):
+        return self._tick_vals[alias_sample(key_uniforms(keys),
+                                            self._prob, self._alias)]
+
+    def update_ticks(self, i):
+        """Arrival-tick offsets for every client's round-``i[c]`` update
+        message ([C] traced int32 -> [C] int32, each >= 1)."""
+        if self._ticks_const:
+            return jnp.full((self.C,), self._tick0, jnp.int32)
+        keys = jax.vmap(jax.random.fold_in)(self._upd_client_keys, i)
+        return self._draw_ticks(keys)
+
+    def broadcast_ticks(self, k):
+        """Per-client arrival-tick offsets of broadcast ``k`` (scalar
+        traced int32 -> [C] int32)."""
+        if self._ticks_const:
+            return jnp.full((self.C,), self._tick0, jnp.int32)
+        bk = jax.random.fold_in(self._bc_base, k)
+        keys = jax.vmap(jax.random.fold_in,
+                        in_axes=(None, 0))(bk, self._cidx)
+        return self._draw_ticks(keys)
+
+    # -- host-side wrappers (host-loop cohort engine) ----------------------
+    def host_update_ticks(self, i: np.ndarray) -> np.ndarray:
+        if self._ticks_const:
+            return np.full(self.C, self._tick0, np.int64)
+        return np.asarray(self._host_upd(jnp.asarray(i, jnp.int32)),
+                          np.int64)
+
+    def host_broadcast_ticks(self, k: int) -> np.ndarray:
+        if self._ticks_const:
+            return np.full(self.C, self._tick0, np.int64)
+        return np.asarray(self._host_bc(jnp.int32(k)), np.int64)
+
+    def host_avail(self, t: int) -> Optional[np.ndarray]:
+        if self._host_avail is None:
+            return None
+        return np.asarray(self._host_avail(jnp.int32(t)))
+
+    # -- continuous-seconds draws (event simulator) ------------------------
+    def _lat_s(self, key) -> Any:
+        u = jax.random.uniform(key, (2,))
+        return self._values_s[alias_sample(u, self._prob, self._alias)]
+
+    def update_latency_s(self, c: int, i: int) -> float:
+        """Latency (virtual seconds) of client c's round-i update — same
+        bin the cohort engines quantize for this message."""
+        if self.K == 1:
+            return float(self._values_s[0])
+        if not hasattr(self, "_upd_s_jit"):
+            self._upd_s_jit = jax.jit(lambda c, i: self._lat_s(
+                jax.random.fold_in(
+                    jax.random.fold_in(self._upd_base, c), i)))
+        return float(self._upd_s_jit(jnp.int32(c), jnp.int32(i)))
+
+    def broadcast_latencies_s(self, k: int) -> np.ndarray:
+        """All C clients' latency seconds for broadcast ``k`` in ONE
+        vectorized draw — same per-(k, c) keys and uniforms as the
+        cohort engines' ``broadcast_ticks``, so every engine puts the
+        message in the same bin."""
+        if self.K == 1:
+            return np.full(self.C, float(self._values_s[0]))
+        if not hasattr(self, "_bc_vec_jit"):
+            def draw(k):
+                bk = jax.random.fold_in(self._bc_base, k)
+                keys = jax.vmap(jax.random.fold_in,
+                                in_axes=(None, 0))(bk, self._cidx)
+                return self._values_s[alias_sample(
+                    key_uniforms(keys), self._prob, self._alias)]
+            self._bc_vec_jit = jax.jit(draw)
+        return np.asarray(self._bc_vec_jit(jnp.int32(k)), np.float64)
+
+
+# -- plan cache: plans are immutable, sampler jits are reused across
+#    engine instances (benchmarks build fresh simulators per repetition)
+_PLAN_CACHE: Dict[Any, ScenarioPlan] = {}
+_PLAN_CACHE_MAX = 32
+
+
+def scenario_plan(scenario: Scenario, *, C: int, seed: int,
+                  dt: Optional[float] = None) -> ScenarioPlan:
+    key = (scenario, C, seed, dt)
+    plan = _PLAN_CACHE.pop(key, None)
+    if plan is None:
+        plan = ScenarioPlan(scenario, C=C, seed=seed, dt=dt)
+    _PLAN_CACHE[key] = plan                      # pop+reinsert: LRU order
+    while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
+        _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[], Scenario]] = {}
+
+
+def register_scenario(name: str):
+    """Decorator: register a zero-arg Scenario builder under ``name``."""
+    def deco(fn: Callable[[], Scenario]):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def scenario_names():
+    return sorted(_REGISTRY)
+
+
+def get_scenario(spec) -> Scenario:
+    """Resolve a scenario argument: a ``Scenario`` passes through, a
+    string looks up a registered preset."""
+    if isinstance(spec, Scenario):
+        return spec
+    if isinstance(spec, str):
+        if spec not in _REGISTRY:
+            raise KeyError(f"unknown scenario {spec!r} "
+                           f"(have {scenario_names()})")
+        return _REGISTRY[spec]()
+    raise TypeError(f"scenario must be a Scenario or preset name, "
+                    f"got {type(spec).__name__}")
+
+
+@register_scenario("uniform")
+def _uniform() -> Scenario:
+    """The legacy default network: latency U(0.05, 0.1) virtual seconds,
+    full availability, caller-supplied speeds."""
+    return Scenario("uniform", LatencyTable.from_uniform(0.05, 0.1, 8))
+
+
+@register_scenario("mobile_diurnal")
+def _mobile_diurnal() -> Scenario:
+    """Phone-fleet shape: lognormal latency (wifi body, cellular tail),
+    diurnal charging/idle windows with per-client phase, bimodal
+    fast/slow device split."""
+    return Scenario(
+        "mobile_diurnal",
+        LatencyTable.from_lognormal(median=0.3, sigma=0.8, n_bins=12),
+        Diurnal(period_s=512.0, on_frac=0.75),
+        SpeedModel(kind="bimodal", slow=0.3, slow_frac=0.3))
+
+
+@register_scenario("iot_straggler")
+def _iot_straggler() -> Scenario:
+    """Sensor-fleet shape: Pareto-tail latency (lossy links, retries),
+    epoch churn (duty-cycled radios), Zipf long-tail compute speeds."""
+    return Scenario(
+        "iot_straggler",
+        LatencyTable.from_pareto(scale=0.1, alpha=1.2, n_bins=12,
+                                 q_hi=0.99),
+        Churn(p_available=0.9, epoch_s=64.0),
+        SpeedModel(kind="zipf", alpha=0.5))
+
+
+def scenario_from_trace(path: str, *, name: Optional[str] = None,
+                        availability=None,
+                        speed_model: Optional[SpeedModel] = None,
+                        n_bins: int = 16) -> Scenario:
+    """Build a scenario whose latency table is fit to a measured trace
+    (JSON/CSV of per-message seconds, see ``LatencyTable.from_trace``)."""
+    return Scenario(name or f"trace:{path}",
+                    LatencyTable.from_trace(path, n_bins=n_bins),
+                    availability if availability is not None else AlwaysOn(),
+                    speed_model)
+
+
+def legacy_latency_scenario(latency) -> Scenario:
+    """Adapt the device engine's pre-scenario ``latency`` spec: a float
+    is a constant virtual-second latency, an (lo, hi) pair is uniform;
+    ``None`` is the legacy default network."""
+    if callable(latency):
+        raise TypeError(
+            "the jitted engines take a latency *scenario* — a Scenario, "
+            "a preset name, a float (virtual seconds) or an (lo, hi) "
+            "uniform range — not a host callable; a Python latency_fn "
+            "cannot run inside the jitted tick loop (use engine='cohort' "
+            "with latency_fn=... for host-callable latency)")
+    if latency is None:
+        return get_scenario("uniform")
+    if isinstance(latency, (int, float)):
+        return Scenario(f"const:{latency}",
+                        LatencyTable.constant(float(latency)))
+    lo, hi = (float(latency[0]), float(latency[1]))
+    if lo == hi:
+        return Scenario(f"const:{lo}", LatencyTable.constant(lo))
+    return Scenario(f"uniform:{lo},{hi}",
+                    LatencyTable.from_uniform(lo, hi, 8))

@@ -180,6 +180,66 @@ def test_pytree_flattener_rejects_empty_template():
         PyTreeFlattener({"empty": ()})
 
 
+# --- scenarios: latency tables + availability invariants ---------------------
+
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_latency_table_construction_roundtrip(data):
+    """Tables built from arbitrary positive traces are valid
+    distributions, their alias decomposition encodes exactly the bin
+    probabilities, and the JSON round trip is exact."""
+    from repro.scenarios import LatencyTable, implied_probs
+    n = data.draw(st.integers(1, 200))
+    seed = data.draw(st.integers(0, 2 ** 31 - 1))
+    n_bins = data.draw(st.integers(1, 32))
+    scale = data.draw(st.floats(1e-3, 1e3))
+    rng = np.random.default_rng(seed)
+    samples = scale * (0.05 + rng.lognormal(0.0, 1.0, n))
+    t = LatencyTable.from_samples(samples, n_bins=n_bins)
+    assert abs(sum(t.probs) - 1.0) < 1e-9
+    assert all(b >= a for a, b in zip(t.values, t.values[1:]))
+    assert samples.min() <= t.mean() <= samples.max() + 1e-9
+    np.testing.assert_allclose(implied_probs(*t.alias_arrays()),
+                               np.asarray(t.probs), atol=1e-7)
+    assert LatencyTable.from_json(t.to_json()) == t
+    # tick quantization: every bin maps to >= 1 tick, monotone in value
+    dt = data.draw(st.floats(1e-2, 1e2))
+    ticks = t.tick_values(dt)
+    assert (ticks >= 1).all()
+    assert (np.diff(ticks) >= 0).all()
+
+
+@given(period=st.floats(64.0, 4096.0), on_frac=st.floats(0.3, 0.9),
+       seed=st.integers(0, 1000))
+@settings(max_examples=6, deadline=None)
+def test_availability_mask_invariant_no_credit_no_update(period, on_frac,
+                                                         seed):
+    """Engine-level availability invariant: every client masked off at
+    the first ticks has taken no iteration, accrued no credit, and sent
+    no update after those ticks — only on clients contribute messages."""
+    from repro.cohort import CohortSimulator
+    from repro.core import LogRegTask
+    from repro.data import make_binary_dataset
+    from repro.scenarios import Diurnal, LatencyTable, Scenario
+    X, y = make_binary_dataset(60, 4, seed=0, noise=0.3)
+    task = LogRegTask(X, y, sample_seed=0)
+    scn = Scenario("prop", LatencyTable.constant(1.0),
+                   Diurnal(period_s=period, on_frac=on_frac))
+    eng = CohortSimulator(task, n_clients=4, sizes_per_client=[64] * 3,
+                          round_stepsizes=[0.1] * 3, d=2, seed=seed,
+                          block=4, scenario=scn).engine
+    n_ticks = 4
+    off = np.ones(eng.C, bool)
+    for t in range(1, n_ticks + 1):
+        off &= ~np.asarray(eng._plan.host_avail(t))
+    for _ in range(n_ticks):
+        eng.step()
+    st = eng.state
+    assert (st.h[off] == 0).all() and (st.credit[off] == 0).all()
+    assert (st.i[off] == 0).all()
+    assert eng.total_messages == int(st.i[~off].sum())
+
+
 # --- MoE dispatch conservation -------------------------------------------------
 
 @given(seed=st.integers(0, 100), cf=st.floats(0.5, 2.0))
