@@ -39,6 +39,16 @@ It measures what heterogeneity costs each engine: the host engine pays
 extra [C]-sized device calls per tick, the device engine folds the same
 draws into its jitted tick at near-zero marginal dispatch.
 
+A fifth workload (``heavy_tail_ring``) measures the heavy-tail ring
+cost fix: an ``iot_straggler``-class Pareto table (q_hi=0.99) whose
+tail spans ~80 ticks at the workload's dt.  The device engine is built
+and run twice on the same table — ``capped`` (default
+``Scenario.ring_cap=32``: bounded L-slot ring + overflow bucket) vs
+``uncapped`` (ring_cap >= the tail, the pre-overflow behavior where
+L = next_pow2(max latency ticks) and the per-slot scatter unrolls with
+it) — recording ring length L, compile+warm seconds, and steady-state
+run seconds for each.
+
 Writes ``BENCH_cohort.json`` (cwd) with the raw numbers, including
 ``speedup_vs_event`` and ``speedup_vs_cohort`` for the device engine —
 the acceptance number is device >= 5x host-cohort at C=4096 on the
@@ -221,6 +231,59 @@ def run_scenarios(report=None):
     return rows
 
 
+def run_heavy_tail(report=None):
+    """Heavy-tail ring workload: capped ring + overflow bucket vs the
+    legacy unbounded ring on an iot_straggler-class Pareto table."""
+    from repro.cohort.state import next_pow2
+    from repro.scenarios import LatencyTable, Scenario, scenario_plan
+
+    X, y = make_binary_dataset(2_048, 32, seed=0, noise=0.3)
+    table = LatencyTable.from_pareto(scale=16.0, alpha=1.05, n_bins=12,
+                                     q_hi=0.99)
+    rounds, iters, C = 4, 4, 64
+    kw = dict(sizes_per_client=[iters] * rounds,
+              round_stepsizes=[0.1] * rounds, d=1, seed=0)
+    # dt = block / max(speed) = 4 s -> the q_hi tail spans ~80 ticks
+    probe = scenario_plan(Scenario("probe", table), C=C, seed=0, dt=4.0)
+    uncapped_ring = next_pow2(probe.max_lat_ticks + 1)
+    variants = {
+        "capped": Scenario("iot_tail_capped", table),
+        "uncapped": Scenario("iot_tail_uncapped", table,
+                             ring_cap=uncapped_ring),
+    }
+    own_report = report is None
+    report = {} if own_report else report
+    entry = {"clients": C, "rounds": rounds, "iters_per_round": iters,
+             "max_lat_ticks": probe.max_lat_ticks}
+    rows = []
+    for vname, scn in variants.items():
+        cfg = FLConfig(engine="device", cohort_block=4, scenario=scn)
+        task = as_cohort_task(_mk_task(X, y), C)
+        t0 = time.time()
+        sim = make_simulator(cfg, task, n_clients=C, **kw)
+        _time_run(sim, rounds)               # compile + first run
+        compile_s = time.time() - t0
+        dt_run = _median_run(
+            lambda: make_simulator(cfg, task, n_clients=C, **kw), rounds)
+        eng = sim.engine
+        entry[vname] = {
+            "ring_L": eng.L, "overflow_Q": eng.Q,
+            "far_groups_F": eng.F,
+            "compile_and_warm_sec": compile_s, "run_sec": dt_run,
+            "client_rounds_per_sec": C * rounds / dt_run,
+        }
+        rows.append((f"cohort_scale_heavy_tail_{vname}", dt_run * 1e6,
+                     f"L={eng.L} Q={eng.Q} compile {compile_s:.2f}s "
+                     f"run {dt_run * 1e3:.1f}ms"))
+    cap, unc = entry["capped"], entry["uncapped"]
+    entry["capped"]["compile_speedup_vs_uncapped"] = (
+        unc["compile_and_warm_sec"] / cap["compile_and_warm_sec"])
+    report["heavy_tail_ring"] = entry
+    if own_report:
+        _merge_write(report)
+    return rows
+
+
 def run():
     X, y = make_binary_dataset(2_048, 32, seed=0, noise=0.3)
     rows, report = [], {}
@@ -286,5 +349,6 @@ def run():
 
     rows += run_model_scale(report)
     rows += run_scenarios(report)
+    rows += run_heavy_tail(report)
     _merge_write(report)
     return rows

@@ -66,7 +66,8 @@ def main():
     # windows/churn, drawn fleet speeds.  Virtual completion time shows
     # what stragglers and off-windows cost the asynchronous protocol.
     C = 256
-    for preset in ("uniform", "mobile_diurnal", "iot_straggler"):
+    for preset in ("uniform", "mobile_diurnal", "iot_straggler",
+                   "geo_regional", "sensor_renewal"):
         sim_task = LogRegTask(X, y, l2=1.0 / len(X), sample_seed=0)
         res = make_simulator(
             FLConfig(engine="device", cohort_block=16, scenario=preset),
@@ -75,6 +76,27 @@ def main():
               f"rounds={res['final']['round']} "
               f"virtual_time={res['final']['time']:,.0f}s "
               f"messages={res['final']['messages']}")
+
+    # -- heterogeneity v2: per-client tables + correlated churn ----------
+    # two network populations assigned per client (a [T, K] table stack
+    # gathered over table_id[c] inside the jitted loop) and regional
+    # outages sharing a per-(epoch, region) factor — still bit-identical
+    # between the host-loop and device engines.
+    from repro.scenarios import (LatencyTable, RegionalChurn, Scenario,
+                                 TableAssignment)
+    scn = Scenario(
+        "two_pop_regional",
+        (LatencyTable.from_lognormal(median=0.08, sigma=0.4, n_bins=8),
+         LatencyTable.from_pareto(scale=0.2, alpha=1.3, n_bins=8)),
+        RegionalChurn(n_regions=4, p_available=0.9, p_region_up=0.95),
+        assignment=TableAssignment("draw", weights=(0.7, 0.3)))
+    sim_task = LogRegTask(X, y, l2=1.0 / len(X), sample_seed=0)
+    res = make_simulator(
+        FLConfig(engine="device", cohort_block=16, scenario=scn),
+        sim_task, n_clients=C, **kw).run(max_rounds=rounds)
+    print(f"[scenario {scn.name} C={C}] rounds={res['final']['round']} "
+          f"virtual_time={res['final']['time']:,.0f}s "
+          f"messages={res['final']['messages']}")
 
 
 if __name__ == "__main__":

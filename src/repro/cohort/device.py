@@ -19,6 +19,20 @@ and the client axis of every [C, ...] block is sharded over the local
 devices via ``repro.sharding.cohort_shardings``, with the state buffer
 donated across segments.
 
+The update ring is bounded: its length L (and the unrolled per-slot
+bucket scatter) covers latency offsets only up to the plan's
+``ring_ticks`` boundary (``Scenario.ring_cap``), and draws quantizing
+past it go to an explicit Q-slot OVERFLOW BUCKET — (arrival tick,
+pre-weighted [D] vector, [R] round counts) entries merged by exact
+arrival tick.  Heavy-tailed tables (``iot_straggler``-class Pareto
+tails) therefore no longer scale compile time/memory with
+``next_pow2(max latency ticks)``.  The host engine splits its arrival
+buckets at the same plan boundary and applies ``v -= far + near`` in
+the same order, so the split is invisible to the bit-parity contract;
+if the bucket ever exhausts (more distinct far arrival ticks in flight
+than Q slots), the segment stops with an error latch and ``run``
+raises with the knob to turn.
+
 Fidelity: ticks use the same quantization and the same integer
 fixed-point credit (``state.FRAC_BITS``) as the host engine, and sample
 draws are (client, round, iteration) addressed, so the two cohort
@@ -59,10 +73,19 @@ from repro.scenarios import (get_scenario, legacy_latency_scenario,
                              scenario_plan)
 from repro.sharding import cohort_mesh, cohort_shardings
 
+# Unroll bound for the overflow bucket's per-completion-tick far-group
+# loop: one iteration per distinct far arrival tick.  Most tables have a
+# handful of bins past the ring boundary; a union of many fine-binned
+# per-client tables is clamped here so the jitted tick never scales
+# with the tail — a tick that genuinely produces more distinct far
+# groups than this trips the err latch and run() raises with the
+# ring_cap advice.
+FAR_UNROLL_CAP = 16
+
 
 def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
-                   d_gate: int, L: int, R: int, B: int, plan,
-                   dp_clip: float, dp_sigma: float,
+                   d_gate: int, L: int, R: int, B: int, Q: int, F: int,
+                   plan, dp_clip: float, dp_sigma: float,
                    dp_round_clip: float, use_dp_kernel: bool,
                    interpret: bool, seed: int):
     """Compile the eval-boundary segment runner for one configuration.
@@ -90,16 +113,48 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
         def tick_fn(st: DeviceCohortState) -> DeviceCohortState:
             t = st.tick + 1
 
-            # 1) server: pop this tick's arrival bucket, merge H counts,
+            # 1) server: pop this tick's arrival bucket (ring slot +
+            #    any overflow entry due now), merge H counts,
             #    cascade-fire every round whose H just filled
             slot = t & (L - 1)
             cnt_row = st.upd_cnt[slot]                       # [R]
-            v = jnp.where(jnp.sum(cnt_row) > 0,
-                          st.v - st.upd_vec[slot], st.v)
+            if F > 0:
+                ovf_hit = st.ovf_at == t                     # [Q]
+                # entries merge by arrival tick at insert, so at most
+                # one slot is due; the masked sums only run on hit
+                # ticks (far arrivals are the latency tail)
+
+                def pop_ovf(_):
+                    return (jnp.sum(st.ovf_vec
+                                    * ovf_hit.astype(jnp.float32)[:, None],
+                                    axis=0),
+                            jnp.sum(st.ovf_cnt
+                                    * ovf_hit.astype(jnp.int32)[:, None],
+                                    axis=0))
+
+                ovf_vec_t, ovf_cnt_t = lax.cond(
+                    jnp.any(ovf_hit), pop_ovf,
+                    lambda _: (jnp.zeros((D,), jnp.float32),
+                               jnp.zeros((R,), jnp.int32)), None)
+                cnt_total = cnt_row + ovf_cnt_t
+                # overflow + ring_slot in THIS order — the host engine
+                # applies far + near the same way (bit parity)
+                v = jnp.where(jnp.sum(cnt_total) > 0,
+                              st.v - (ovf_vec_t + st.upd_vec[slot]),
+                              st.v)
+                ovf_vec = jnp.where(ovf_hit[:, None], 0.0, st.ovf_vec)
+                ovf_at = jnp.where(ovf_hit, 0, st.ovf_at)
+                ovf_cnt = jnp.where(ovf_hit[:, None], 0, st.ovf_cnt)
+            else:
+                cnt_total = cnt_row
+                v = jnp.where(jnp.sum(cnt_row) > 0,
+                              st.v - st.upd_vec[slot], st.v)
+                ovf_vec, ovf_at, ovf_cnt = (st.ovf_vec, st.ovf_at,
+                                            st.ovf_cnt)
             upd_vec = st.upd_vec.at[slot].set(
                 jnp.zeros((D,), jnp.float32))
             upd_cnt = st.upd_cnt.at[slot].set(jnp.zeros((R,), jnp.int32))
-            h_counts = st.h_counts + cnt_row
+            h_counts = st.h_counts + cnt_total
 
             def casc_cond(c):
                 sk, hc = c[0], c[1]
@@ -166,7 +221,7 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
             messages = st.messages + jnp.sum(done.astype(jnp.int32))
 
             def do_complete(ops):
-                w, U, upd_vec, upd_cnt = ops
+                w, U, upd_vec, upd_cnt, ovf_vec, ovf_at, ovf_cnt, err = ops
                 if dp_on:
                     nk = jax.random.fold_in(noise_base, t)
                     noised, _ = cohort_clip_noise(
@@ -181,13 +236,18 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                     sent = U
                 # update latency addressed by (client, round) — st.i is
                 # pre-increment, matching the host engine's draw point
-                arr_slot = (t + plan.update_ticks(st.i)) & (L - 1)  # [C]
+                arr_off = plan.update_ticks(st.i)                  # [C]
+                arr_slot = (t + arr_off) & (L - 1)
+                # offsets past the ring go to the overflow bucket; the
+                # ring (and its unrolled scatter) stays bounded by the
+                # plan's ring_ticks, not the latency tail
+                near = done & (arr_off < L) if F > 0 else done
                 # unrolled masked sums, NOT a scatter-add: each slot's
                 # vector must be the host engine's _weighted_sum over the
                 # full client axis (same expression, same float add
                 # order) or host<->device bit parity breaks
                 for sl in range(L):
-                    in_l = done & (arr_slot == sl)
+                    in_l = near & (arr_slot == sl)
                     vec = jnp.sum(
                         sent * (eta * in_l.astype(jnp.float32))[:, None],
                         axis=0)
@@ -195,16 +255,66 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                         jnp.where(jnp.any(in_l), upd_vec[sl] + vec,
                                   upd_vec[sl]))
                 oh_l = ((arr_slot[:, None] == jnp.arange(L)[None, :])
-                        & done[:, None]).astype(jnp.int32)         # [C, L]
+                        & near[:, None]).astype(jnp.int32)         # [C, L]
                 oh_r = ((st.i & (R - 1))[:, None]
                         == jnp.arange(R)[None, :]).astype(jnp.int32)
                 upd_cnt = upd_cnt + jnp.einsum("cl,cr->lr", oh_l, oh_r)
-                U = jnp.where(done[:, None], 0.0, sent)
-                return w, U, upd_vec, upd_cnt
+                if F > 0:
+                    far_mask = done & (arr_off >= L)
+                    arr_tick = t + arr_off
 
-            w, U, upd_vec, upd_cnt = lax.cond(
+                    def do_far(fops):
+                        ovf_vec, ovf_at, ovf_cnt, err = fops
+                        remaining = far_mask
+                        # one unroll step per DISTINCT far arrival tick,
+                        # ascending (matches the host's np.unique order);
+                        # F = |{quantized bin values >= L}| bounds the
+                        # distinct far ticks one completion can produce
+                        for _ in range(F):
+                            tick_q = jnp.min(jnp.where(
+                                remaining, arr_tick,
+                                jnp.int32(2 ** 31 - 1)))
+                            grp = remaining & (arr_tick == tick_q)
+                            any_grp = jnp.any(grp)
+                            vec = jnp.sum(
+                                sent * (eta
+                                        * grp.astype(jnp.float32))[:, None],
+                                axis=0)
+                            cnt = jnp.sum(
+                                oh_r * grp.astype(jnp.int32)[:, None],
+                                axis=0)
+                            match = ovf_at == tick_q
+                            has_match = jnp.any(match)
+                            free = ovf_at == 0
+                            ok = has_match | jnp.any(free)
+                            idx = jnp.where(has_match, jnp.argmax(match),
+                                            jnp.argmax(free))
+                            write = any_grp & ok
+                            ovf_vec = ovf_vec.at[idx].set(
+                                jnp.where(write, ovf_vec[idx] + vec,
+                                          ovf_vec[idx]))
+                            ovf_cnt = ovf_cnt.at[idx].set(
+                                jnp.where(write, ovf_cnt[idx] + cnt,
+                                          ovf_cnt[idx]))
+                            ovf_at = ovf_at.at[idx].set(
+                                jnp.where(write, tick_q, ovf_at[idx]))
+                            err = err | (any_grp & ~ok).astype(jnp.int32)
+                            remaining = remaining & ~grp
+                        err = err | jnp.any(remaining).astype(jnp.int32)
+                        return ovf_vec, ovf_at, ovf_cnt, err
+
+                    ovf_vec, ovf_at, ovf_cnt, err = lax.cond(
+                        jnp.any(far_mask), do_far, lambda fops: fops,
+                        (ovf_vec, ovf_at, ovf_cnt, err))
+                U = jnp.where(done[:, None], 0.0, sent)
+                return (w, U, upd_vec, upd_cnt, ovf_vec, ovf_at,
+                        ovf_cnt, err)
+
+            (w, U, upd_vec, upd_cnt, ovf_vec, ovf_at, ovf_cnt,
+             err) = lax.cond(
                 jnp.any(done), do_complete, lambda ops: ops,
-                (w, U, upd_vec, upd_cnt))
+                (w, U, upd_vec, upd_cnt, ovf_vec, ovf_at, ovf_cnt,
+                 st.err))
             i = jnp.where(done, st.i + 1, st.i)
             h = jnp.where(done, 0, h)
             credit = jnp.where(
@@ -214,11 +324,13 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                 w=w, U=U, v=v, i=i, h=h, k=k, credit=credit,
                 server_k=server_k, tick=t, upd_vec=upd_vec,
                 upd_cnt=upd_cnt, h_counts=h_counts, bc_v=bc_v,
-                bc_k=bc_k, bc_at=bc_at, messages=messages,
+                bc_k=bc_k, bc_at=bc_at, ovf_vec=ovf_vec, ovf_at=ovf_at,
+                ovf_cnt=ovf_cnt, err=err, messages=messages,
                 broadcasts=broadcasts)
 
         return lax.while_loop(
-            lambda s: (s.server_k < target_k) & (s.tick < tick_limit),
+            lambda s: ((s.server_k < target_k) & (s.tick < tick_limit)
+                       & (s.err == 0)),
             tick_fn, st)
 
     return jax.jit(segment, donate_argnums=(0,))
@@ -272,9 +384,22 @@ class DeviceCohortEngine:
 
         # ring capacities and the static per-tick block size: n is bounded
         # by the round size AND by the credit cap (2 * block post-accrual).
-        # L covers the latency table's TAIL — heavy-tailed tables widen
-        # the update ring (and the unrolled bucket scatter with it).
-        self.L = next_pow2(self._plan.max_lat_ticks + 1)
+        # L covers the latency table's tail only up to the plan's
+        # ring boundary (Scenario.ring_cap): draws quantizing past it go
+        # to the Q-slot overflow bucket instead of widening the ring and
+        # its unrolled scatter, so compile time/memory no longer scale
+        # with next_pow2(max latency ticks) under heavy-tailed tables.
+        # F bounds the distinct far arrival ticks one completion tick
+        # can produce (the count of quantized bin values past the ring),
+        # itself capped at FAR_UNROLL_CAP so a fine-binned per-client
+        # table union cannot reintroduce tail-scaling compile cost —
+        # a completion tick needing more far groups than the unroll
+        # covers trips the err latch (raise ring_cap) instead.
+        self.L = self._plan.ring_ticks
+        self.F = min(len(self._plan.far_tick_values), FAR_UNROLL_CAP)
+        self.Q = (next_pow2(min(C * (self.d_gate + 1),
+                                self._plan.max_lat_ticks + 1, 128))
+                  if self.F else 1)
         self.R = next_pow2(self.d_gate + 2)
         self.B = next_pow2(self.d_gate + 2)
         self.b_stat = next_pow2(
@@ -292,7 +417,7 @@ class DeviceCohortEngine:
         self.history: List[Dict[str, float]] = []
 
     def _init_state(self) -> DeviceCohortState:
-        C, D, L, R, B = self.C, self.D, self.L, self.R, self.B
+        C, D, L, R, B, Q = self.C, self.D, self.L, self.R, self.B, self.Q
         v0 = jnp.asarray(self.ctask.init_flat(), jnp.float32)
         # four distinct buffers — donation rejects aliased arguments
         zc = lambda: jnp.zeros((C,), jnp.int32)  # noqa: E731
@@ -307,6 +432,10 @@ class DeviceCohortEngine:
             bc_v=jnp.zeros((B, D), jnp.float32),
             bc_k=jnp.zeros((B,), jnp.int32),
             bc_at=jnp.zeros((B, C), jnp.int32),
+            ovf_vec=jnp.zeros((Q, D), jnp.float32),
+            ovf_at=jnp.zeros((Q,), jnp.int32),
+            ovf_cnt=jnp.zeros((Q, R), jnp.int32),
+            err=jnp.int32(0),
             messages=jnp.int32(0), broadcasts=jnp.int32(0))
         return DeviceCohortState(**{
             f: jax.device_put(val, self._shardings[f])
@@ -315,7 +444,7 @@ class DeviceCohortEngine:
     # -- compiled segment (cached on the cohort task, like its block fns) --
     def _segment_fn(self):
         key = ("device_segment", self.C, self.D, self.block, self.b_stat,
-               self.d_gate, self.L, self.R, self.B,
+               self.d_gate, self.L, self.R, self.B, self.Q,
                self._plan.fingerprint(), self.dp_clip, self.dp_sigma,
                self.dp_round_clip, self.use_dp_kernel, self.interpret,
                self.seed)
@@ -327,8 +456,8 @@ class DeviceCohortEngine:
             fn = cache[key] = _build_segment(
                 self.ctask, C=self.C, D=self.D, block=self.block,
                 b_stat=self.b_stat, d_gate=self.d_gate, L=self.L,
-                R=self.R, B=self.B, plan=self._plan,
-                dp_clip=self.dp_clip,
+                R=self.R, B=self.B, Q=self.Q, F=self.F,
+                plan=self._plan, dp_clip=self.dp_clip,
                 dp_sigma=self.dp_sigma, dp_round_clip=self.dp_round_clip,
                 use_dp_kernel=self.use_dp_kernel,
                 interpret=self.interpret, seed=self.seed)
@@ -371,10 +500,21 @@ class DeviceCohortEngine:
             self.state = st
             sk = int(st.server_k)            # the one sync per segment
             if sk < target:
+                if int(st.err) != 0:
+                    raise RuntimeError(
+                        f"device engine overflow bucket exhausted at "
+                        f"tick {int(st.tick)} (Q={self.Q} slots, "
+                        f"F={self.F} far groups/tick, ring L={self.L}):"
+                        f" too many distinct far arrival ticks in "
+                        f"flight — raise Scenario.ring_cap (now "
+                        f"{self._plan.scenario.ring_cap}) or shorten "
+                        f"the latency tail")
                 raise RuntimeError(
                     f"cohort engine stalled: {int(st.tick)} ticks, "
                     f"server_k={sk} < {max_rounds} "
-                    f"(in flight: {int(jnp.sum(st.upd_cnt))} updates, "
+                    f"(in flight: "
+                    f"{int(jnp.sum(st.upd_cnt)) + int(jnp.sum(st.ovf_cnt))}"
+                    f" updates, "
                     f"{int(jnp.sum(jnp.any(st.bc_at > st.tick, axis=1)))}"
                     f" broadcasts)")
             if sk >= next_eval:

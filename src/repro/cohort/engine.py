@@ -180,10 +180,14 @@ class CohortEngine:
         st.tick += 1
         t = st.tick
 
-        # 1) server: apply this tick's arrival bucket, maybe broadcast
-        contrib, pairs = self.updates.pop(t)
-        if contrib is not None:
-            st.v = _apply_contrib(st.v, contrib)
+        # 1) server: apply this tick's arrival bucket, maybe broadcast.
+        # far + near in THIS order — the device engine applies
+        # overflow + ring_slot the same way (bit parity).
+        far, near, pairs = self.updates.pop(t)
+        if far is not None and near is not None:
+            st.v = _apply_contrib(st.v, far + near)
+        elif far is not None or near is not None:
+            st.v = _apply_contrib(st.v, far if far is not None else near)
         for r, _c in pairs:
             self._h_counts[r] = self._h_counts.get(r, 0) + 1
         while self._h_counts.get(st.server_k, 0) >= self.C:
@@ -260,6 +264,11 @@ class CohortEngine:
         else:
             sent, agg = st.U, None
 
+        # arrival offsets past the plan's ring boundary go to the FAR
+        # tier — mirrors the device engine's overflow bucket so the
+        # delivery-time float add order matches (see UpdateBuckets)
+        ring = (self._plan.ring_ticks if self._plan is not None
+                else None)
         for g in groups:
             in_g = arrive == g
             if agg is not None and len(groups) == 1:
@@ -269,7 +278,9 @@ class CohortEngine:
                                                       jnp.float32))
             self.updates.add(int(g), vec,
                              [(int(st.i[c]), int(c))
-                              for c in np.flatnonzero(in_g)])
+                              for c in np.flatnonzero(in_g)],
+                             far=(ring is not None
+                                  and int(g) - st.tick >= ring))
 
         st.i[done] += 1
         st.h[done] = 0

@@ -134,6 +134,14 @@ class DeviceCohortState(NamedTuple):
         tick): an undelivered broadcast j gates every client at rounds
         <= j + d - 1, hence at most d + 1 distinct k outstanding and
         B >= next_pow2(d + 2) suffices.
+      * overflow bucket, Q slots of (arrival tick, pre-weighted [D]
+        vector, [R] round counts): update arrivals whose latency offset
+        reaches past the L-slot ring (heavy-tailed tables under the
+        ``Scenario.ring_cap`` boundary).  Entries merge by exact arrival
+        tick, so correctness (and host<->device bit parity) is
+        preserved while L stays bounded; ``ovf_at == 0`` marks a free
+        slot and ``err`` latches capacity exhaustion (the segment stops
+        and the host raises).
     """
     w: Any                 # [C, D] f32 client models
     U: Any                 # [C, D] f32 round-update accumulators
@@ -150,26 +158,45 @@ class DeviceCohortState(NamedTuple):
     bc_v: Any              # [B, D] f32 broadcast model snapshots
     bc_k: Any              # [B]    i32 broadcast round counters
     bc_at: Any             # [B, C] i32 per-client arrival ticks
+    ovf_vec: Any           # [Q, D] f32 far-arrival overflow vectors
+    ovf_at: Any            # [Q]    i32 overflow arrival ticks (0 = free)
+    ovf_cnt: Any           # [Q, R] i32 overflow (round, client) counts
+    err: Any               # []     i32 overflow-capacity error latch
     messages: Any          # []     i32 client->server updates sent
     broadcasts: Any        # []     i32 server broadcasts fired
 
 
 @dataclass
 class UpdateBuckets:
-    """In-flight client->server updates, bucket-summed by arrival tick."""
+    """In-flight client->server updates, bucket-summed by arrival tick.
+
+    Buckets are split into NEAR (arrival offset inside the device
+    engine's update ring) and FAR (offsets past it, the device engine's
+    overflow bucket) tiers.  The split changes nothing semantically —
+    both tiers deliver at their exact arrival tick — but it pins the
+    float summation order: the host engine applies ``v -= far + near``
+    exactly like the device engine's ``v -= overflow + ring_slot``, so
+    host-cohort vs device stays bit-identical under heavy-tailed
+    latency tables.
+    """
     contrib: Dict[int, Any] = field(default_factory=dict)   # tick -> [D]
+    far_contrib: Dict[int, Any] = field(default_factory=dict)
     meta: Dict[int, List[Tuple[int, int]]] = field(default_factory=dict)
 
-    def add(self, tick: int, vec, pairs: List[Tuple[int, int]]) -> None:
-        if tick in self.contrib:
-            self.contrib[tick] = self.contrib[tick] + vec
+    def add(self, tick: int, vec, pairs: List[Tuple[int, int]],
+            far: bool = False) -> None:
+        bucket = self.far_contrib if far else self.contrib
+        if tick in bucket:
+            bucket[tick] = bucket[tick] + vec
         else:
-            self.contrib[tick] = vec
+            bucket[tick] = vec
         self.meta.setdefault(tick, []).extend(pairs)
 
     def pop(self, tick: int):
-        """-> ([D] contribution or None, [(round, client), ...])."""
-        return (self.contrib.pop(tick, None), self.meta.pop(tick, []))
+        """-> ([D] far contribution or None, [D] near contribution or
+        None, [(round, client), ...])."""
+        return (self.far_contrib.pop(tick, None),
+                self.contrib.pop(tick, None), self.meta.pop(tick, []))
 
     def __len__(self) -> int:
         return sum(len(m) for m in self.meta.values())

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Model configuration
@@ -272,11 +272,14 @@ class FLConfig:
     #                               tick loop) | device (repro.cohort,
     #                               jitted on-device tick loop)
     cohort_block: int = 64        # iteration credit per cohort tick
-    scenario: Optional[str] = None  # repro.scenarios preset name
+    scenario: Optional[Any] = None  # repro.scenarios preset name
     #                               (uniform | mobile_diurnal |
-    #                               iot_straggler | registered); None
-    #                               keeps each engine's legacy default
-    #                               network
+    #                               iot_straggler | geo_regional |
+    #                               sensor_renewal | registered) or a
+    #                               frozen Scenario instance (per-client
+    #                               latency tables, regional/renewal
+    #                               churn, ring_cap); None keeps each
+    #                               engine's legacy default network
 
 
 @dataclass(frozen=True)

@@ -14,10 +14,14 @@ Heterogeneity can come from a ``repro.scenarios`` Scenario (pass
 the same message-addressed threefry chain the cohort engines use — the
 update from client c's round i and broadcast k's delivery to client c
 land in the same latency-table bin in every engine (here in continuous
-seconds, there quantized to ticks).  Deterministic availability models
-(diurnal windows) integrate into the lazy-advance schedule; epoch-churn
-models have no continuous-time form and are rejected — use the cohort
-engines.
+seconds, there quantized to ticks) — including per-client tables, whose
+``table_id`` gather is part of the shared plan.  Availability models
+with a continuous-time form integrate into the lazy-advance schedule:
+diurnal windows exactly, and ``RenewalChurn`` as the true alternating
+renewal process (per-client exponential on/off holding times) the
+cohort engines approximate per tick.  Epoch-hash churn (``Churn``,
+``RegionalChurn``) has no continuous form and is rejected — use the
+cohort engines.
 
 The simulator is the test harness for Theorem 1's consistency invariant
 and the measurement rig for rounds/communication benchmarks.
@@ -145,7 +149,9 @@ class AsyncFLSimulator:
         msg = cl.finish_round()
         self.total_messages += 1
         if self._plan is not None:
-            lat = self._plan.update_latency_s(c, msg.round_idx)
+            # one batched draw per round, cached in the plan (the whole
+            # fleet's round-i update latencies in a single device call)
+            lat = self._plan.update_latencies_s(msg.round_idx)[c]
         else:
             lat = self.latency_fn(self.rng)
         self._push(ev.time + lat, "update_arrival", msg)

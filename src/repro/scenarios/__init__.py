@@ -1,24 +1,31 @@
 # Device-sampleable fleet-heterogeneity scenarios: empirical latency
-# tables (alias-method draws on the engines' threefry chain),
-# availability/churn models, long-tail speed distributions, and a
-# registry of named presets + trace ingestion.  One Scenario spec drives
-# all three engines (event, host-cohort, device-resident) — see
+# tables (alias-method draws on the engines' threefry chain, one table
+# fleet-wide or per-client via a TableAssignment), availability/churn
+# models (diurnal windows, independent/regional epoch churn, renewal-
+# process on/off churn), long-tail speed distributions, and a registry
+# of named presets + trace ingestion.  One Scenario spec drives all
+# three engines (event, host-cohort, device-resident) — see
 # repro.scenarios.registry for the key-chain contract that keeps
 # host-cohort vs device trajectories bit-identical under stochastic
 # latency and availability.
 from repro.scenarios.availability import (AlwaysOn, Churn, Diurnal,
+                                          RegionalChurn, RenewalChurn,
                                           SpeedModel)
-from repro.scenarios.registry import (Scenario, ScenarioPlan, get_scenario,
+from repro.scenarios.registry import (Scenario, ScenarioPlan,
+                                      TableAssignment, get_scenario,
                                       legacy_latency_scenario,
                                       register_scenario, scenario_from_trace,
                                       scenario_names, scenario_plan)
 from repro.scenarios.tables import (LatencyTable, alias_sample,
-                                    implied_probs, key_uniforms)
+                                    alias_sample_rows, implied_probs,
+                                    key_uniforms, vose_alias)
 
 __all__ = [
-    "LatencyTable", "alias_sample", "key_uniforms", "implied_probs",
-    "AlwaysOn", "Diurnal", "Churn", "SpeedModel",
-    "Scenario", "ScenarioPlan", "scenario_plan", "get_scenario",
-    "register_scenario", "scenario_names", "scenario_from_trace",
-    "legacy_latency_scenario",
+    "LatencyTable", "alias_sample", "alias_sample_rows", "key_uniforms",
+    "implied_probs", "vose_alias",
+    "AlwaysOn", "Diurnal", "Churn", "RegionalChurn", "RenewalChurn",
+    "SpeedModel",
+    "Scenario", "ScenarioPlan", "TableAssignment", "scenario_plan",
+    "get_scenario", "register_scenario", "scenario_names",
+    "scenario_from_trace", "legacy_latency_scenario",
 ]

@@ -27,6 +27,7 @@ Bonawitz et al. (1902.01046) report for real device populations.
 """
 from __future__ import annotations
 
+import bisect
 from dataclasses import dataclass
 from typing import Callable, Optional
 
@@ -36,6 +37,8 @@ import numpy as np
 
 AVAIL_SALT = 0xA7A1B      # availability threefry chain: seed ^ AVAIL_SALT
 PHASE_SALT = 0xD1A7       # numpy stream for diurnal phase draws
+REGION_SALT = 0x2E610     # regional-churn shared-factor threefry chain
+RENEW_SALT = 0x9E4A1      # renewal-churn threefry / numpy streams
 
 
 @dataclass(frozen=True)
@@ -166,6 +169,231 @@ class Churn:
             "Churn availability is tick-hash addressed and has no "
             "continuous-time form; the event simulator cannot run it — "
             "use the cohort engines (engine='cohort'|'device')")
+
+
+@dataclass(frozen=True)
+class RegionalChurn:
+    """Correlated churn: clients belong to regions, and availability
+    mixes a shared per-(epoch, region) outage draw with the per-client
+    draw — the regional-outage / network-partition regime independent
+    ``Churn`` cannot express.
+
+    Client c is on in an epoch iff its REGION is up (shared uniform from
+    ``fold_in(PRNGKey(seed ^ REGION_SALT), epoch)`` against
+    ``p_region_up``) AND its own draw passes (the ``Churn`` chain
+    against ``p_available / p_region_up``), so the marginal duty is
+    exactly ``p_available`` while two clients of one region share the
+    outage factor: P(both on) = p_available^2 / p_region_up >
+    p_available^2 (positive within-region correlation); clients of
+    different regions stay independent.  Both draws are tick-hash
+    addressed — pure functions of (epoch, region / client) — so the two
+    cohort engines see identical masks; like ``Churn`` there is no
+    continuous-time form and the event simulator rejects it.
+
+    Regions come from ``region_of`` (an explicit [C] tuple of ids) or
+    default to ``n_regions`` contiguous equal blocks of the client axis.
+    """
+    n_regions: int = 4
+    p_available: float = 0.9
+    p_region_up: float = 0.95
+    epoch_s: float = 64.0
+    region_of: Optional[tuple] = None
+    event_supported: bool = False
+
+    def __post_init__(self):
+        if self.n_regions < 1:
+            raise ValueError("need n_regions >= 1")
+        if not 0.0 < self.p_available <= self.p_region_up <= 1.0:
+            raise ValueError(
+                "need 0 < p_available <= p_region_up <= 1 (the marginal "
+                "duty cannot exceed the region-up probability)")
+        if self.epoch_s <= 0.0:
+            raise ValueError("need epoch_s > 0")
+        if self.region_of is not None:
+            r = tuple(int(x) for x in self.region_of)
+            if any(not 0 <= x < self.n_regions for x in r):
+                raise ValueError(
+                    f"region_of ids must lie in [0, {self.n_regions}); "
+                    f"got {sorted(set(self.region_of))}")
+            object.__setattr__(self, "region_of", r)
+
+    @property
+    def duty(self) -> float:
+        return self.p_available
+
+    def regions(self, C: int) -> np.ndarray:
+        if self.region_of is not None:
+            if len(self.region_of) != C:
+                raise ValueError(
+                    f"region_of has {len(self.region_of)} entries for "
+                    f"{C} clients")
+            return np.asarray(self.region_of, np.int32)
+        return (np.arange(C) * self.n_regions // C).astype(np.int32)
+
+    def tick_plan(self, C: int, dt: float,
+                  seed: int) -> Optional[Callable]:
+        if self.p_available >= 1.0:
+            return None
+        epoch_t = max(1, int(round(self.epoch_s / dt)))
+        base_c = jax.random.PRNGKey(seed ^ AVAIL_SALT)
+        base_r = jax.random.PRNGKey(seed ^ REGION_SALT)
+        reg = jnp.asarray(self.regions(C))
+        p_client = jnp.float32(self.p_available / self.p_region_up)
+        p_reg = jnp.float32(self.p_region_up)
+        R = self.n_regions
+
+        def mask(t):
+            e = t // epoch_t
+            ur = jax.random.uniform(jax.random.fold_in(base_r, e), (R,))
+            uc = jax.random.uniform(jax.random.fold_in(base_c, e), (C,))
+            return (ur[reg] < p_reg) & (uc < p_client)
+
+        return mask
+
+    def windows(self, C: int, seed: int):
+        raise ValueError(
+            "RegionalChurn is tick-hash addressed and has no "
+            "continuous-time form; the event simulator cannot run it — "
+            "use the cohort engines (engine='cohort'|'device'), or "
+            "RenewalChurn for a churn model the event simulator "
+            "integrates")
+
+
+class _RenewalWindows:
+    """Continuous-time alternating-renewal on/off windows for the event
+    simulator: per-client exponential holding times (rate ``off_rate``
+    while on, ``on_rate`` while off), initial state stationary
+    Bernoulli(duty), switch times generated lazily per client."""
+
+    def __init__(self, C: int, on_rate: float, off_rate: float,
+                 seed: int):
+        self.on_rate = float(on_rate)
+        self.off_rate = float(off_rate)
+        duty = on_rate / (on_rate + off_rate)
+        self._rngs = [np.random.default_rng(
+            ((seed ^ RENEW_SALT) * 1_000_003 + c) & 0xFFFFFFFF)
+            for c in range(C)]
+        self._init_on = [bool(r.random() < duty) for r in self._rngs]
+        self._switch = [[0.0] for _ in range(C)]    # cumulative times
+        self._cum_on = [[0.0] for _ in range(C)]    # on-secs at switch j
+
+    def _state(self, c: int, j: int) -> bool:
+        """State during segment j (between switches j and j+1)."""
+        return self._init_on[c] ^ (j % 2 == 1)
+
+    def _extend(self, c: int, t: float) -> None:
+        sw, co = self._switch[c], self._cum_on[c]
+        while sw[-1] <= t:
+            j = len(sw) - 1
+            on = self._state(c, j)
+            rate = self.off_rate if on else self.on_rate
+            dur = self._rngs[c].exponential(1.0 / rate)
+            sw.append(sw[-1] + dur)
+            co.append(co[-1] + (dur if on else 0.0))
+
+    def _cum(self, c: int, t: float) -> float:
+        """Cumulative on-seconds of client c over [0, t]."""
+        self._extend(c, t)
+        sw = self._switch[c]
+        j = bisect.bisect_right(sw, t) - 1
+        on = self._state(c, j)
+        return self._cum_on[c][j] + (t - sw[j] if on else 0.0)
+
+    def on_time(self, c: int, t0: float, t1: float) -> float:
+        return max(0.0, self._cum(c, t1) - self._cum(c, t0))
+
+    def advance(self, c: int, t0: float, work_s: float) -> float:
+        """Earliest t with ``on_time(c, t0, t) == work_s`` (inverse)."""
+        if work_s <= 0.0:
+            return t0
+        target = self._cum(c, t0) + work_s
+        while True:
+            co, sw = self._cum_on[c], self._switch[c]
+            j = bisect.bisect_right(co, target) - 1
+            if j < len(sw) - 1:
+                # target is reached inside segment j (which must be on:
+                # cum_on grows only there)
+                return sw[j] + (target - co[j])
+            self._extend(c, sw[-1] + 1.0 / min(self.on_rate,
+                                               self.off_rate))
+
+
+@dataclass(frozen=True)
+class RenewalChurn:
+    """Stochastic churn as an alternating renewal process: each client
+    holds ON for Exp(off_rate) seconds, then OFF for Exp(on_rate)
+    seconds, independently across clients.  Stationary duty is
+    ``on_rate / (on_rate + off_rate)``.
+
+    Unlike ``Churn`` this HAS a continuous-time form, so the event
+    simulator integrates it exactly (``_RenewalWindows``: lazy per-client
+    switch times in its advance/on-time schedule).  The cohort engines
+    approximate it per tick from the addressed threefry chain: virtual
+    time splits into epochs of ``epoch_cycles`` mean on/off cycles, and
+    within an epoch the mask is an exact renewal process whose initial
+    state and holding times are pure functions of (client, epoch) —
+    ``fold_in(PRNGKey(seed ^ RENEW_SALT), epoch)`` then per-client
+    fold_in — regenerated at epoch boundaries from the stationary law.
+    Host-cohort vs device therefore stays BIT-IDENTICAL, while
+    event-vs-cohort is a *statistical* equivalence contract (same
+    stationary duty and holding-time law, not the same sample paths) —
+    the chi-square tests pin it.
+    """
+    on_rate: float = 1.0 / 16.0     # per virtual second: 1 / mean_off_s
+    off_rate: float = 1.0 / 48.0    # per virtual second: 1 / mean_on_s
+    epoch_cycles: float = 4.0       # cohort-engine regeneration horizon
+    n_draws: int = 24               # holding times drawn per epoch
+    event_supported: bool = True
+
+    def __post_init__(self):
+        if self.on_rate <= 0.0 or self.off_rate <= 0.0:
+            raise ValueError("need on_rate > 0 and off_rate > 0")
+        if self.epoch_cycles <= 0.0 or self.n_draws < 2:
+            raise ValueError("need epoch_cycles > 0 and n_draws >= 2")
+        # n_draws must comfortably cover the holdings in one epoch, or
+        # the tick mask clamps to the post-n_draws state
+        if self.n_draws < 4 * self.epoch_cycles:
+            raise ValueError(
+                f"n_draws={self.n_draws} cannot cover epoch_cycles="
+                f"{self.epoch_cycles} (need >= 4 * epoch_cycles)")
+
+    @property
+    def duty(self) -> float:
+        return self.on_rate / (self.on_rate + self.off_rate)
+
+    @property
+    def mean_cycle_s(self) -> float:
+        return 1.0 / self.on_rate + 1.0 / self.off_rate
+
+    def tick_plan(self, C: int, dt: float,
+                  seed: int) -> Optional[Callable]:
+        epoch_t = max(1, int(round(self.epoch_cycles * self.mean_cycle_s
+                                   / dt)))
+        base = jax.random.PRNGKey(seed ^ RENEW_SALT)
+        cidx = jnp.arange(C)
+        N = int(self.n_draws)
+        duty = jnp.float32(self.duty)
+        # holding j's exit rate depends on the state it is held in
+        j_odd = (jnp.arange(N) % 2 == 1)
+
+        def mask(t):
+            e = t // epoch_t
+            tau = (t - e * epoch_t).astype(jnp.float32) * jnp.float32(dt)
+            keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+                jax.random.fold_in(base, e), cidx)
+            u = jax.vmap(lambda k: jax.random.uniform(k, (N + 1,)))(keys)
+            init_on = u[:, 0] < duty                      # stationary
+            state_on = init_on[:, None] ^ j_odd[None, :]  # [C, N]
+            rate = jnp.where(state_on, jnp.float32(self.off_rate),
+                             jnp.float32(self.on_rate))
+            dur = -jnp.log1p(-u[:, 1:]) / rate
+            ndone = jnp.sum(jnp.cumsum(dur, axis=1) <= tau, axis=1)
+            return init_on ^ (ndone % 2 == 1)
+
+        return mask
+
+    def windows(self, C: int, seed: int) -> _RenewalWindows:
+        return _RenewalWindows(C, self.on_rate, self.off_rate, seed)
 
 
 # ---------------------------------------------------------------------------

@@ -33,27 +33,128 @@ ingest via ``scenario_from_trace`` (JSON/CSV per-message seconds).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.scenarios.availability import (AlwaysOn, Churn, Diurnal,
+                                          RegionalChurn, RenewalChurn,
                                           SpeedModel)
-from repro.scenarios.tables import LatencyTable, alias_sample, key_uniforms
+from repro.scenarios.tables import (LatencyTable, alias_sample_rows,
+                                    key_uniforms, vose_alias)
 
 LAT_SALT = 0x1A7E9C       # latency threefry chain: seed ^ LAT_SALT
+TABLE_SALT = 0x7AB1E      # numpy stream for drawn table assignments
+
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+@dataclass(frozen=True)
+class TableAssignment:
+    """[C]-indexed mapping of clients onto a scenario's latency tables.
+
+    kinds:
+      cycle:    client c uses table c % T (the per-device trace default)
+      explicit: ``table_id`` is the full [C] tuple of table indices
+      draw:     each client draws its table from ``weights`` (uniform
+                when omitted), deterministically from the engine seed
+    """
+    kind: str = "cycle"
+    table_id: Optional[Tuple[int, ...]] = None
+    weights: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        if self.kind not in ("cycle", "explicit", "draw"):
+            raise ValueError(f"unknown table assignment kind "
+                             f"{self.kind!r} (want cycle|explicit|draw)")
+        if self.kind == "explicit":
+            if self.table_id is None:
+                raise ValueError("explicit table assignment needs "
+                                 "table_id")
+            object.__setattr__(self, "table_id",
+                               tuple(int(x) for x in self.table_id))
+        if self.weights is not None:
+            w = tuple(float(x) for x in self.weights)
+            if any(x < 0.0 for x in w) or not sum(w) > 0.0:
+                raise ValueError("table assignment weights must be "
+                                 "non-negative and sum to > 0")
+            object.__setattr__(self, "weights", w)
+
+    def resolve(self, C: int, T: int, seed: int) -> np.ndarray:
+        """-> [C] int32 table ids, validated against C and T."""
+        if self.kind == "explicit":
+            if len(self.table_id) != C:
+                raise ValueError(
+                    f"table_id length {len(self.table_id)} does not "
+                    f"match n_clients {C}")
+            tid = np.asarray(self.table_id, np.int64)
+            if tid.size and (tid.min() < 0 or tid.max() >= T):
+                raise ValueError(
+                    f"table_id entries must lie in [0, {T}); got range "
+                    f"[{tid.min()}, {tid.max()}]")
+            return tid.astype(np.int32)
+        if self.kind == "draw":
+            if self.weights is not None and len(self.weights) != T:
+                raise ValueError(
+                    f"need one weight per table: {len(self.weights)} "
+                    f"weights for {T} tables")
+            w = (np.asarray(self.weights, np.float64)
+                 if self.weights is not None else np.ones(T))
+            rng = np.random.default_rng(seed ^ TABLE_SALT)
+            return rng.choice(T, size=C, p=w / w.sum()).astype(np.int32)
+        return (np.arange(C) % T).astype(np.int32)
 
 
 @dataclass(frozen=True)
 class Scenario:
     """Declarative heterogeneity spec shared by all engines.  Frozen and
-    hashable: the device engine keys its compiled-segment cache on it."""
+    hashable: the device engine keys its compiled-segment cache on it.
+
+    ``latency`` is one ``LatencyTable`` for the whole fleet or a tuple
+    of tables with a ``TableAssignment`` mapping clients onto them
+    (per-client heterogeneous network distributions, e.g. per-device
+    trace ingestion).  ``ring_cap`` bounds the device engine's update
+    arrival ring (and hence its unrolled bucket scatter): latency draws
+    quantizing past it spill into the engine's explicit overflow bucket
+    instead of widening the ring — both cohort engines split arrivals at
+    the same plan-computed boundary, which is what keeps them
+    bit-identical under heavy-tailed tables."""
     name: str
-    latency: LatencyTable
+    latency: Any                    # LatencyTable | tuple of LatencyTable
     availability: Any = field(default_factory=AlwaysOn)
     speed_model: Optional[SpeedModel] = None
+    assignment: Optional[TableAssignment] = None
+    ring_cap: int = 32
+
+    def __post_init__(self):
+        lat = self.latency
+        if isinstance(lat, (list, tuple)):
+            lat = tuple(lat)
+            if not lat:
+                raise ValueError("need at least one latency table")
+            if not all(isinstance(t, LatencyTable) for t in lat):
+                raise TypeError("latency tuple entries must be "
+                                "LatencyTables")
+            object.__setattr__(self, "latency", lat)
+        elif not isinstance(lat, LatencyTable):
+            raise TypeError(f"latency must be a LatencyTable or a tuple "
+                            f"of them, got {type(lat).__name__}")
+        if self.assignment is None and len(self.tables) > 1:
+            object.__setattr__(self, "assignment", TableAssignment())
+        if self.ring_cap < 2:
+            raise ValueError("need ring_cap >= 2")
+
+    @property
+    def tables(self) -> Tuple[LatencyTable, ...]:
+        lat = self.latency
+        return lat if isinstance(lat, tuple) else (lat,)
 
     def speeds(self, C: int, seed: int) -> Optional[np.ndarray]:
         if self.speed_model is None:
@@ -82,13 +183,38 @@ class ScenarioPlan:
         self.C = int(C)
         self.seed = int(seed)
         self.dt = dt
-        tbl = scenario.latency
-        self.K = len(tbl.values)
-        prob, alias = tbl.alias_arrays()
-        self._prob = jnp.asarray(prob)
-        self._alias = jnp.asarray(alias)
-        self._values_s = jnp.asarray(np.asarray(tbl.values, np.float32))
+        tables = scenario.tables
+        self.T = len(tables)
+        self.K = max(len(t.values) for t in tables)
+        if scenario.assignment is not None:
+            self.table_id = scenario.assignment.resolve(self.C, self.T,
+                                                        seed)
+        else:
+            self.table_id = np.zeros(self.C, np.int32)
+        # stacked [T, K] blocks: tables padded to a common K with
+        # zero-probability bins (LatencyTable.padded — padded tables draw
+        # exactly like the originals), then gathered once over
+        # table_id[c] into per-client [C, K] rows so the in-loop draw is
+        # a take_along_axis, not a per-call table dispatch
+        padded = [t.padded(self.K) for t in tables]
+        vals_tk = np.stack([v for v, _ in padded])          # [T, K] f64
+        aliases = [vose_alias(p) for _, p in padded]
+        tid = self.table_id
+        self._values_c = vals_tk[tid]                       # [C, K] f64
+        self._prob_c = jnp.asarray(
+            np.stack([a[0] for a in aliases])[tid])         # [C, K] f32
+        self._alias_c = jnp.asarray(
+            np.stack([a[1] for a in aliases])[tid])         # [C, K] i32
+        self._values_c_dev = jnp.asarray(self._values_c, jnp.float32)
         self._cidx = jnp.arange(self.C)
+        # per-client-constant seconds: every assigned row is a single
+        # effective bin — skip the RNG entirely (legacy constant
+        # network).  Values round-trip through f32 like the sampled path
+        # (the draw gathers from the f32 [C, K] block).
+        self._const_s = bool(
+            (self._values_c == self._values_c[:, :1]).all())
+        self._const_vals_s = self._values_c[:, 0].astype(
+            np.float32).astype(np.float64)
 
         lat_base = jax.random.PRNGKey(seed ^ LAT_SALT)
         self._upd_base = jax.random.fold_in(lat_base, 0)
@@ -96,18 +222,30 @@ class ScenarioPlan:
         self._upd_client_keys = jax.vmap(
             jax.random.fold_in, in_axes=(None, 0))(self._upd_base,
                                                    self._cidx)
+        self._upd_s_cache: Dict[int, np.ndarray] = {}
 
         self.duty = float(scenario.availability.duty)
         if dt is not None:
-            tick_vals = tbl.tick_values(dt)
-            self.max_lat_ticks = int(tick_vals.max())
-            # constant fast path: a one-bin table, OR a multi-bin table
-            # whose bins all quantize to the same tick at this dt (the
-            # default uniform scenario at the usual dt >= 0.1) — skip
-            # the in-loop RNG entirely, matching the legacy engines
-            self._ticks_const = bool((tick_vals == tick_vals[0]).all())
-            self._tick0 = int(tick_vals[0])
-            self._tick_vals = jnp.asarray(tick_vals)
+            tick_c = np.maximum(
+                1, np.ceil(self._values_c / dt)).astype(np.int32)
+            self.max_lat_ticks = int(tick_c.max())
+            # near/far arrival split shared by BOTH cohort engines: the
+            # device update ring holds ring_ticks slots; draws past it
+            # go to the explicit overflow bucket.  far_tick_values is
+            # the (compile-time) set of quantized bin values >= the
+            # boundary — it bounds how many distinct far arrival ticks
+            # one completion tick can produce.
+            self.ring_ticks = next_pow2(
+                min(self.max_lat_ticks + 1, scenario.ring_cap))
+            self.far_tick_values = tuple(
+                int(v) for v in np.unique(tick_c[tick_c >= self.ring_ticks]))
+            # constant fast path: every client's table quantizes to one
+            # tick at this dt (the default uniform scenario at the usual
+            # dt >= 0.1) — skip the in-loop RNG, matching legacy engines
+            self._ticks_const = bool((tick_c == tick_c[:, :1]).all())
+            self._tick0_c = tick_c[:, 0].astype(np.int64)
+            self._tick0_c_dev = jnp.asarray(tick_c[:, 0])
+            self._tick_vals_c = jnp.asarray(tick_c)
             self.avail_mask = scenario.availability.tick_plan(
                 self.C, dt, seed)
             self._host_upd = jax.jit(self.update_ticks)
@@ -122,38 +260,44 @@ class ScenarioPlan:
         return (self.scenario, self.dt)
 
     # -- tick-quantized draws (cohort engines, jit-traceable) --------------
-    def _draw_ticks(self, keys):
-        return self._tick_vals[alias_sample(key_uniforms(keys),
-                                            self._prob, self._alias)]
+    def _draw_bins(self, keys):
+        """Per-client alias draw: [C, 2]-keyed bins from each client's
+        assigned table row."""
+        return alias_sample_rows(key_uniforms(keys), self._prob_c,
+                                 self._alias_c)
 
     def update_ticks(self, i):
         """Arrival-tick offsets for every client's round-``i[c]`` update
         message ([C] traced int32 -> [C] int32, each >= 1)."""
         if self._ticks_const:
-            return jnp.full((self.C,), self._tick0, jnp.int32)
+            return self._tick0_c_dev
         keys = jax.vmap(jax.random.fold_in)(self._upd_client_keys, i)
-        return self._draw_ticks(keys)
+        j = self._draw_bins(keys)
+        return jnp.take_along_axis(self._tick_vals_c, j[:, None],
+                                   axis=1)[:, 0]
 
     def broadcast_ticks(self, k):
         """Per-client arrival-tick offsets of broadcast ``k`` (scalar
         traced int32 -> [C] int32)."""
         if self._ticks_const:
-            return jnp.full((self.C,), self._tick0, jnp.int32)
+            return self._tick0_c_dev
         bk = jax.random.fold_in(self._bc_base, k)
         keys = jax.vmap(jax.random.fold_in,
                         in_axes=(None, 0))(bk, self._cidx)
-        return self._draw_ticks(keys)
+        j = self._draw_bins(keys)
+        return jnp.take_along_axis(self._tick_vals_c, j[:, None],
+                                   axis=1)[:, 0]
 
     # -- host-side wrappers (host-loop cohort engine) ----------------------
     def host_update_ticks(self, i: np.ndarray) -> np.ndarray:
         if self._ticks_const:
-            return np.full(self.C, self._tick0, np.int64)
+            return self._tick0_c.copy()
         return np.asarray(self._host_upd(jnp.asarray(i, jnp.int32)),
                           np.int64)
 
     def host_broadcast_ticks(self, k: int) -> np.ndarray:
         if self._ticks_const:
-            return np.full(self.C, self._tick0, np.int64)
+            return self._tick0_c.copy()
         return np.asarray(self._host_bc(jnp.int32(k)), np.int64)
 
     def host_avail(self, t: int) -> Optional[np.ndarray]:
@@ -162,35 +306,55 @@ class ScenarioPlan:
         return np.asarray(self._host_avail(jnp.int32(t)))
 
     # -- continuous-seconds draws (event simulator) ------------------------
-    def _lat_s(self, key) -> Any:
-        u = jax.random.uniform(key, (2,))
-        return self._values_s[alias_sample(u, self._prob, self._alias)]
+    def update_latencies_s(self, i: int) -> np.ndarray:
+        """All C clients' latency seconds for their round-``i`` update
+        message in ONE vectorized draw (cached per round): same
+        per-(c, i) keys and uniforms as the cohort engines'
+        ``update_ticks``, so every engine puts each message in the same
+        bin.  The event simulator asks per message; the batch+cache
+        turns its per-message jit dispatch + host sync into one device
+        call per round."""
+        if self._const_s:
+            return self._const_vals_s.copy()
+        i = int(i)
+        hit = self._upd_s_cache.get(i)
+        if hit is not None:
+            return hit
+        if not hasattr(self, "_upd_vec_jit"):
+            def draw(i):
+                keys = jax.vmap(jax.random.fold_in,
+                                in_axes=(0, None))(self._upd_client_keys,
+                                                   i)
+                j = self._draw_bins(keys)
+                return jnp.take_along_axis(self._values_c_dev,
+                                           j[:, None], axis=1)[:, 0]
+            self._upd_vec_jit = jax.jit(draw)
+        out = np.asarray(self._upd_vec_jit(jnp.int32(i)), np.float64)
+        self._upd_s_cache[i] = out
+        while len(self._upd_s_cache) > 16:      # rounds advance in order
+            self._upd_s_cache.pop(next(iter(self._upd_s_cache)))
+        return out
 
     def update_latency_s(self, c: int, i: int) -> float:
         """Latency (virtual seconds) of client c's round-i update — same
         bin the cohort engines quantize for this message."""
-        if self.K == 1:
-            return float(self._values_s[0])
-        if not hasattr(self, "_upd_s_jit"):
-            self._upd_s_jit = jax.jit(lambda c, i: self._lat_s(
-                jax.random.fold_in(
-                    jax.random.fold_in(self._upd_base, c), i)))
-        return float(self._upd_s_jit(jnp.int32(c), jnp.int32(i)))
+        return float(self.update_latencies_s(i)[c])
 
     def broadcast_latencies_s(self, k: int) -> np.ndarray:
         """All C clients' latency seconds for broadcast ``k`` in ONE
         vectorized draw — same per-(k, c) keys and uniforms as the
         cohort engines' ``broadcast_ticks``, so every engine puts the
         message in the same bin."""
-        if self.K == 1:
-            return np.full(self.C, float(self._values_s[0]))
+        if self._const_s:
+            return self._const_vals_s.copy()
         if not hasattr(self, "_bc_vec_jit"):
             def draw(k):
                 bk = jax.random.fold_in(self._bc_base, k)
                 keys = jax.vmap(jax.random.fold_in,
                                 in_axes=(None, 0))(bk, self._cidx)
-                return self._values_s[alias_sample(
-                    key_uniforms(keys), self._prob, self._alias)]
+                j = self._draw_bins(keys)
+                return jnp.take_along_axis(self._values_c_dev,
+                                           j[:, None], axis=1)[:, 0]
             self._bc_vec_jit = jax.jit(draw)
         return np.asarray(self._bc_vec_jit(jnp.int32(k)), np.float64)
 
@@ -277,12 +441,56 @@ def _iot_straggler() -> Scenario:
         SpeedModel(kind="zipf", alpha=0.5))
 
 
+@register_scenario("geo_regional")
+def _geo_regional() -> Scenario:
+    """Geo-distributed fleet: two network populations (fiber body,
+    cellular tail) assigned per client, with correlated regional
+    outages — the partition regime independent churn cannot express.
+    Cohort-engines only (RegionalChurn has no continuous-time form)."""
+    return Scenario(
+        "geo_regional",
+        (LatencyTable.from_lognormal(median=0.08, sigma=0.4, n_bins=8),
+         LatencyTable.from_lognormal(median=0.5, sigma=0.9, n_bins=8)),
+        RegionalChurn(n_regions=4, p_available=0.9, p_region_up=0.95,
+                      epoch_s=64.0),
+        SpeedModel(kind="lognormal", sigma=0.4),
+        assignment=TableAssignment("draw", weights=(0.6, 0.4)))
+
+
+@register_scenario("sensor_renewal")
+def _sensor_renewal() -> Scenario:
+    """Duty-cycled sensor fleet: Pareto-tail latency plus renewal-process
+    on/off churn (exponential holding times) — the churn model ALL three
+    engines run: the event simulator integrates the continuous renewal
+    windows, the cohort engines the addressed per-tick approximation."""
+    return Scenario(
+        "sensor_renewal",
+        LatencyTable.from_pareto(scale=0.1, alpha=1.2, n_bins=12,
+                                 q_hi=0.99),
+        RenewalChurn(on_rate=1.0 / 16.0, off_rate=1.0 / 48.0),
+        SpeedModel(kind="zipf", alpha=0.5))
+
+
 def scenario_from_trace(path: str, *, name: Optional[str] = None,
                         availability=None,
                         speed_model: Optional[SpeedModel] = None,
-                        n_bins: int = 16) -> Scenario:
+                        n_bins: int = 16,
+                        per_client: bool = False) -> Scenario:
     """Build a scenario whose latency table is fit to a measured trace
-    (JSON/CSV of per-message seconds, see ``LatencyTable.from_trace``)."""
+    (JSON/CSV of per-message seconds, see ``LatencyTable.from_trace``).
+
+    With ``per_client=True`` the trace must be keyed by device (JSON
+    ``clients`` mapping, or CSV with ``client`` + ``latency_s``
+    columns): each distinct trace client becomes its own table
+    (``LatencyTable.per_client_from_trace``) and engine client ``c``
+    uses table ``c % T`` — per-device latency distributions survive
+    ingestion instead of being pooled into one fleet histogram."""
+    if per_client:
+        tables = LatencyTable.per_client_from_trace(path, n_bins=n_bins)
+        return Scenario(
+            name or f"trace:{path}", tables,
+            availability if availability is not None else AlwaysOn(),
+            speed_model, assignment=TableAssignment("cycle"))
     return Scenario(name or f"trace:{path}",
                     LatencyTable.from_trace(path, n_bins=n_bins),
                     availability if availability is not None else AlwaysOn(),
@@ -306,6 +514,9 @@ def legacy_latency_scenario(latency) -> Scenario:
         return Scenario(f"const:{latency}",
                         LatencyTable.constant(float(latency)))
     lo, hi = (float(latency[0]), float(latency[1]))
+    if not 0.0 < lo <= hi:
+        raise ValueError(
+            f"latency=(lo, hi) needs 0 < lo <= hi, got ({lo}, {hi})")
     if lo == hi:
         return Scenario(f"const:{lo}", LatencyTable.constant(lo))
     return Scenario(f"uniform:{lo},{hi}",

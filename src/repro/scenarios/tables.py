@@ -166,6 +166,8 @@ class LatencyTable:
             samples = obj["latency_s"] if isinstance(obj, dict) else obj
             return cls.from_samples(samples, n_bins=n_bins)
         rows = [r.strip() for r in text.splitlines() if r.strip()]
+        if not rows:
+            raise ValueError(f"empty latency trace {path!r}")
         cells = [r.split(",") for r in rows]
         col = 0
         try:
@@ -179,8 +181,62 @@ class LatencyTable:
                     "latencies")
             col = names.index("latency_s")
             cells = cells[1:]
+        if not cells:
+            raise ValueError(f"empty latency trace {path!r} "
+                             "(header but no data rows)")
         return cls.from_samples([float(r[col]) for r in cells],
                                 n_bins=n_bins)
+
+    @classmethod
+    def per_client_from_trace(cls, path: str, n_bins: int = 16
+                              ) -> Tuple["LatencyTable", ...]:
+        """Ingest a trace keyed by device: one table per distinct client.
+
+        JSON: an object with a ``clients`` mapping of client id ->
+        per-message latency seconds.  CSV: header row with both a
+        ``client`` and a ``latency_s`` column.  Tables come back ordered
+        by sorted client id (numeric when the ids parse as numbers), so
+        an engine's client ``c`` maps onto table ``c % T`` under the
+        default cyclic assignment.
+        """
+        ext = os.path.splitext(path)[1].lower()
+        if ext not in (".json", ".csv"):
+            raise ValueError(f"unsupported trace format {ext!r} "
+                             "(want .json or .csv)")
+        with open(path) as f:
+            text = f.read()
+        groups: dict = {}
+        if ext == ".json":
+            obj = json.loads(text)
+            if not isinstance(obj, dict) or "clients" not in obj:
+                raise ValueError(
+                    "per-client JSON trace needs a 'clients' mapping of "
+                    "client id -> [latency_s, ...]")
+            groups = {str(k): list(v) for k, v in obj["clients"].items()}
+        else:
+            rows = [r.strip() for r in text.splitlines() if r.strip()]
+            if not rows:
+                raise ValueError(f"empty latency trace {path!r}")
+            names = [c.strip() for c in rows[0].split(",")]
+            if "client" not in names or "latency_s" not in names:
+                raise ValueError(
+                    f"per-client CSV trace header {names} needs both a "
+                    "'client' and a 'latency_s' column")
+            ci, li = names.index("client"), names.index("latency_s")
+            for r in rows[1:]:
+                c = r.split(",")
+                groups.setdefault(c[ci].strip(), []).append(float(c[li]))
+        if not groups:
+            raise ValueError(f"empty latency trace {path!r}")
+
+        def order(k):
+            try:
+                return (0, float(k), k)
+            except ValueError:
+                return (1, 0.0, k)
+
+        return tuple(cls.from_samples(groups[k], n_bins=n_bins)
+                     for k in sorted(groups, key=order))
 
     # -- stats -------------------------------------------------------------
     def mean(self) -> float:
@@ -209,22 +265,42 @@ class LatencyTable:
 
     def alias_arrays(self) -> Tuple[np.ndarray, np.ndarray]:
         """Vose alias decomposition -> (prob f32 [K], alias i32 [K])."""
-        K = len(self.probs)
-        p = np.asarray(self.probs, np.float64) * K
-        prob = np.zeros(K, np.float64)
-        alias = np.zeros(K, np.int64)
-        small = [i for i in range(K) if p[i] < 1.0]
-        large = [i for i in range(K) if p[i] >= 1.0]
-        while small and large:
-            s, l = small.pop(), large.pop()
-            prob[s] = p[s]
-            alias[s] = l
-            p[l] = (p[l] + p[s]) - 1.0
-            (small if p[l] < 1.0 else large).append(l)
-        for i in large + small:       # numerical leftovers: certain bins
-            prob[i] = 1.0
-            alias[i] = i
-        return prob.astype(np.float32), alias.astype(np.int32)
+        return vose_alias(self.probs)
+
+    def padded(self, K: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(values f64 [K], probs f64 [K]) padded to K bins with
+        zero-probability copies of the last bin — how ``ScenarioPlan``
+        stacks tables of different sizes into one [T, K] block.  Padding
+        bins never win an alias draw (their column probability is 0 and
+        their alias points at a real bin), so a padded table samples
+        exactly like the original."""
+        n = len(self.values)
+        if K < n:
+            raise ValueError(f"cannot pad a {n}-bin table down to {K}")
+        v = np.asarray(self.values + (self.values[-1],) * (K - n))
+        p = np.asarray(self.probs + (0.0,) * (K - n))
+        return v, p
+
+
+def vose_alias(probs) -> Tuple[np.ndarray, np.ndarray]:
+    """Vose alias decomposition of a probability vector (zero-probability
+    padding bins allowed) -> (prob f32 [K], alias i32 [K])."""
+    K = len(probs)
+    p = np.asarray(probs, np.float64) * K
+    prob = np.zeros(K, np.float64)
+    alias = np.zeros(K, np.int64)
+    small = [i for i in range(K) if p[i] < 1.0]
+    large = [i for i in range(K) if p[i] >= 1.0]
+    while small and large:
+        s, l = small.pop(), large.pop()
+        prob[s] = p[s]
+        alias[s] = l
+        p[l] = (p[l] + p[s]) - 1.0
+        (small if p[l] < 1.0 else large).append(l)
+    for i in large + small:       # numerical leftovers: certain bins
+        prob[i] = 1.0
+        alias[i] = i
+    return prob.astype(np.float32), alias.astype(np.int32)
 
 
 def key_uniforms(keys):
@@ -241,6 +317,22 @@ def alias_sample(u, prob, alias):
     K = prob.shape[0]
     j0 = jnp.minimum((u[..., 0] * K).astype(jnp.int32), K - 1)
     return jnp.where(u[..., 1] < prob[j0], j0, alias[j0])
+
+
+def alias_sample_rows(u, prob, alias):
+    """Per-row alias draw for stacked tables: ``u`` [..., 2] uniforms
+    against row-matched ``prob`` / ``alias`` [..., K] arrays (one table
+    row per leading index, e.g. the per-client ``table_id`` gather).
+
+    Identical arithmetic to ``alias_sample`` — for a single table the
+    two produce bit-identical bins, which is what keeps per-client
+    scenarios on the engines' existing parity contract.
+    """
+    K = prob.shape[-1]
+    j0 = jnp.minimum((u[..., 0] * K).astype(jnp.int32), K - 1)
+    p0 = jnp.take_along_axis(prob, j0[..., None], axis=-1)[..., 0]
+    a0 = jnp.take_along_axis(alias, j0[..., None], axis=-1)[..., 0]
+    return jnp.where(u[..., 1] < p0, j0, a0)
 
 
 def implied_probs(prob: np.ndarray, alias: np.ndarray) -> np.ndarray:

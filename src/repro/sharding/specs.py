@@ -142,6 +142,8 @@ def cohort_pspecs(mesh: Mesh, n_clients: int) -> Dict[str, P]:
         "upd_vec": P(None, None), "upd_cnt": P(None, None),
         "h_counts": P(None),
         "bc_v": P(None, None), "bc_k": P(None), "bc_at": P(None, c_ax),
+        "ovf_vec": P(None, None), "ovf_at": P(None),
+        "ovf_cnt": P(None, None), "err": P(),
         "messages": P(), "broadcasts": P(),
     }
 

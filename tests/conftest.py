@@ -8,6 +8,20 @@ import numpy as np
 import pytest
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--regen-golden", action="store_true", default=False,
+        help="regenerate the golden-trajectory fixtures under "
+             "tests/golden/ instead of asserting against them "
+             "(commit the refreshed JSON with the change that moved "
+             "the trajectories)")
+
+
+@pytest.fixture
+def regen_golden(request):
+    return request.config.getoption("--regen-golden")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

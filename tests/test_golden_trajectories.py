@@ -1,0 +1,80 @@
+"""Golden-trajectory regression fixtures for the scenario presets.
+
+Tier-1 parity tests pin engine-vs-engine agreement, which is blind to a
+drift that hits all three engines identically (a changed preset, a
+reordered reduction, a key-chain edit).  These tests pin ABSOLUTE
+eval-loss trajectories of the device engine on the named presets
+against committed JSON fixtures (tests/golden/), with tight tolerances.
+
+When a trajectory moves on purpose, regenerate and commit the fixture:
+
+    PYTHONPATH=src python -m pytest tests/test_golden_trajectories.py \
+        --regen-golden
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.cohort import DeviceCohortSimulator
+from repro.core import LogRegTask
+from repro.data import make_binary_dataset
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "golden_trajectories.json")
+PRESETS = ["uniform", "mobile_diurnal", "iot_straggler"]
+# Tight but not bitwise: trajectories are f32 on-device reductions, and
+# the fixtures must survive BLAS/XLA build differences across machines.
+RTOL, ATOL = 1e-5, 1e-7
+
+
+def _run_preset(name):
+    X, y = make_binary_dataset(300, 12, seed=9, noise=0.3)
+    task = LogRegTask(X, y, l2=1.0 / 300, sample_seed=21)
+    sim = DeviceCohortSimulator(
+        task, n_clients=6, sizes_per_client=[4, 6, 8],
+        round_stepsizes=[0.1, 0.08, 0.06], d=2, seed=2, block=4,
+        scenario=name)
+    res = sim.run(max_rounds=3, eval_every=1)
+    return {
+        "losses": [float(h["loss"]) for h in res["history"]],
+        "final_loss": float(res["final"]["loss"]),
+        "rounds": int(res["final"]["round"]),
+        "messages": int(res["final"]["messages"]),
+        "broadcasts": int(res["final"]["broadcasts"]),
+    }
+
+
+def _load_golden():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("name", PRESETS)
+def test_golden_trajectory(name, regen_golden):
+    got = _run_preset(name)
+    if regen_golden:
+        golden = _load_golden() if os.path.exists(GOLDEN_PATH) else {}
+        golden[name] = got
+        os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(golden, f, indent=2, sort_keys=True)
+        pytest.skip(f"regenerated golden fixture for {name!r}")
+    assert os.path.exists(GOLDEN_PATH), (
+        "no golden fixtures committed; run with --regen-golden")
+    want = _load_golden()[name]
+    # protocol counts are integers: exact
+    for k in ("rounds", "messages", "broadcasts"):
+        assert got[k] == want[k], (k, got[k], want[k])
+    np.testing.assert_allclose(got["losses"], want["losses"],
+                               rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(got["final_loss"], want["final_loss"],
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_golden_fixture_covers_all_presets():
+    """The committed fixture must not silently drop a preset."""
+    if not os.path.exists(GOLDEN_PATH):
+        pytest.skip("fixtures not generated yet")
+    assert set(PRESETS) <= set(_load_golden())

@@ -240,6 +240,58 @@ def test_availability_mask_invariant_no_credit_no_update(period, on_frac,
     assert eng.total_messages == int(st.i[~off].sum())
 
 
+@given(on_rate=st.floats(0.05, 0.5), off_rate=st.floats(0.05, 0.5),
+       seed=st.integers(0, 1000))
+@settings(max_examples=6, deadline=None)
+def test_renewal_churn_stationary_duty(on_rate, off_rate, seed):
+    """RenewalChurn's per-tick mask hits the analytic stationary duty
+    on_rate / (on_rate + off_rate): epoch-spaced samples are
+    independent Bernoulli(duty), so the empirical mean lands within a
+    5-sigma binomial band."""
+    from repro.scenarios import RenewalChurn
+    av = RenewalChurn(on_rate=on_rate, off_rate=off_rate)
+    duty = av.duty
+    C, E = 24, 48
+    mask = av.tick_plan(C=C, dt=1.0, seed=seed)
+    epoch_t = max(1, round(av.epoch_cycles * av.mean_cycle_s))
+    on = sum(int(np.asarray(mask(jnp.int32(e * epoch_t + 1))).sum())
+             for e in range(E))
+    n = C * E
+    band = 5.0 * math.sqrt(duty * (1.0 - duty) / n)
+    assert abs(on / n - duty) < band + 1e-9, (on / n, duty)
+
+
+@given(p=st.floats(0.4, 0.9), margin=st.floats(0.02, 0.1),
+       seed=st.integers(0, 1000))
+@settings(max_examples=6, deadline=None)
+def test_regional_churn_duty_and_correlation_sign(p, margin, seed):
+    """RegionalChurn: marginal duty equals the advertised p_available,
+    within-region masks correlate positively, cross-region pairs stay
+    uncorrelated (draws from independent chains)."""
+    from repro.scenarios import RegionalChurn
+    p_reg = min(1.0, p + margin)
+    av = RegionalChurn(n_regions=2, p_available=p, p_region_up=p_reg,
+                       epoch_s=2.0)
+    C, E = 8, 256
+    mask = av.tick_plan(C=C, dt=1.0, seed=seed)
+    reg = av.regions(C)
+    M = np.stack([np.asarray(mask(jnp.int32(2 * e)))
+                  for e in range(E)]).astype(np.float64)
+    n = C * E
+    band = 5.0 * math.sqrt(p * (1.0 - p) / n)
+    assert abs(M.mean() - p) < band + 1e-9
+    corr = np.corrcoef(M.T)
+    same = (reg[:, None] == reg[None, :]) & ~np.eye(C, dtype=bool)
+    # analytic within-region correlation: p (1/p_reg - 1) / (1 - p)
+    rho = p * (1.0 / p_reg - 1.0) / (1.0 - p)
+    within = corr[same].mean()
+    cross = corr[~(reg[:, None] == reg[None, :])].mean()
+    assert within > rho - 0.25, (within, rho)
+    if rho > 0.3:            # a real regional factor must show up as
+        assert within > 0.05  # strictly positive correlation
+    assert abs(cross) < 0.2, cross
+
+
 # --- MoE dispatch conservation -------------------------------------------------
 
 @given(seed=st.integers(0, 100), cf=st.floats(0.5, 2.0))

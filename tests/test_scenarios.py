@@ -12,7 +12,8 @@ from repro.cohort import CohortSimulator, DeviceCohortSimulator
 from repro.core import AsyncFLSimulator, LogRegTask
 from repro.data import make_binary_dataset
 from repro.scenarios import (AlwaysOn, Churn, Diurnal, LatencyTable,
-                             Scenario, SpeedModel, alias_sample,
+                             RegionalChurn, RenewalChurn, Scenario,
+                             SpeedModel, TableAssignment, alias_sample,
                              get_scenario, implied_probs, key_uniforms,
                              scenario_from_trace, scenario_names,
                              scenario_plan)
@@ -146,6 +147,150 @@ def test_update_ticks_deterministic_and_message_addressed():
     assert (bc != plan.host_broadcast_ticks(3)).any()
 
 
+# --- per-client latency tables ----------------------------------------------
+
+def test_per_client_table_gather_chi_square():
+    """Each client's empirical draw distribution matches ITS assigned
+    table (the [T, K]-stack + table_id gather), pinned per client by a
+    chi-square test over the message-addressed update draws."""
+    tA = LatencyTable.from_uniform(1.0, 5.0, 4)
+    tB = LatencyTable((10.0, 20.0, 40.0), (0.5, 0.3, 0.2))
+    scn = Scenario("pc", (tA, tB),
+                   assignment=TableAssignment("explicit",
+                                              table_id=(0, 1, 1, 0)))
+    plan = scenario_plan(scn, C=4, seed=5)
+    N = 1024
+    draws = np.stack([plan.update_latencies_s(i) for i in range(N)])
+    for c, t in zip(range(4), (tA, tB, tB, tA)):
+        vals = np.asarray(t.values, np.float32)
+        j = np.argmin(np.abs(draws[:, c][:, None]
+                             - vals[None, :].astype(np.float64)), axis=1)
+        counts = np.bincount(j, minlength=len(vals))
+        expected = np.asarray(t.probs) * N
+        assert (expected > 5).all()
+        chi2 = float(((counts - expected) ** 2 / expected).sum())
+        assert chi2 < _chi2_bound(len(vals) - 1), (c, chi2, counts)
+
+
+def test_per_client_tables_event_bins_match_cohort_ticks():
+    """The event simulator's continuous-seconds draw and the cohort
+    engines' tick draw pick the SAME bin for every message, including
+    under per-client tables — ticks are exactly the legacy
+    max(1, ceil(s / dt)) quantization of the seconds."""
+    scn = Scenario("pc2", (LatencyTable.from_uniform(1.0, 50.0, 8),
+                           LatencyTable.from_lognormal(4.0, 0.6, 6)))
+    dt = 3.0
+    pt = scenario_plan(scn, C=6, seed=11, dt=dt)
+    ps = scenario_plan(scn, C=6, seed=11)
+    for i in range(4):
+        iv = jnp.full(6, i, jnp.int32)
+        ticks = np.asarray(pt.host_update_ticks(iv))
+        secs = ps.update_latencies_s(i)
+        np.testing.assert_array_equal(
+            ticks, np.maximum(1, np.ceil(secs / dt)).astype(np.int64))
+    bc_t = np.asarray(pt.host_broadcast_ticks(2))
+    bc_s = ps.broadcast_latencies_s(2)
+    np.testing.assert_array_equal(
+        bc_t, np.maximum(1, np.ceil(bc_s / dt)).astype(np.int64))
+
+
+def test_update_latencies_s_batched_matches_scalar_and_caches():
+    scn = Scenario("b", LatencyTable.from_uniform(0.5, 3.0, 8))
+    plan = scenario_plan(scn, C=8, seed=1)
+    vec = plan.update_latencies_s(3)
+    for c in range(8):
+        assert plan.update_latency_s(c, 3) == vec[c]
+    assert plan.update_latencies_s(3) is vec          # cached per round
+    assert (plan.update_latencies_s(4) != vec).any()
+
+
+def test_table_assignment_kinds_and_validation():
+    tabs = (LatencyTable.constant(1.0), LatencyTable.constant(2.0),
+            LatencyTable.constant(3.0))
+    cyc = TableAssignment("cycle").resolve(7, 3, seed=0)
+    np.testing.assert_array_equal(cyc, np.arange(7) % 3)
+    drawn = TableAssignment("draw").resolve(256, 3, seed=0)
+    assert set(drawn) == {0, 1, 2}
+    # drawn assignment is deterministic in the seed
+    np.testing.assert_array_equal(
+        drawn, TableAssignment("draw").resolve(256, 3, seed=0))
+    w = TableAssignment("draw", weights=(1.0, 0.0, 0.0)).resolve(
+        64, 3, seed=1)
+    assert (w == 0).all()
+    with pytest.raises(ValueError, match="table_id length"):
+        scenario_plan(Scenario(
+            "bad", tabs,
+            assignment=TableAssignment("explicit", table_id=(0, 1))),
+            C=4, seed=0)
+    with pytest.raises(ValueError, match="lie in"):
+        TableAssignment("explicit", table_id=(0, 3, 1, 0)).resolve(
+            4, 3, seed=0)
+    with pytest.raises(ValueError, match="one weight per table"):
+        TableAssignment("draw", weights=(0.5, 0.5)).resolve(4, 3, seed=0)
+    with pytest.raises(ValueError, match="cycle|explicit|draw"):
+        TableAssignment("nope")
+    with pytest.raises(ValueError, match="table_id"):
+        TableAssignment("explicit")
+
+
+def test_error_paths_tables_and_legacy_specs(tmp_path):
+    from repro.scenarios import legacy_latency_scenario
+    with pytest.raises(ValueError, match="0 < lo <= hi"):
+        LatencyTable.from_uniform(0.5, 0.1)
+    with pytest.raises(ValueError, match="lo <= hi"):
+        legacy_latency_scenario((0.5, 0.1))
+    with pytest.raises(ValueError, match="positive and finite"):
+        LatencyTable.from_samples([0.5, -1.0])
+    with pytest.raises(ValueError, match="empty latency trace"):
+        LatencyTable.from_samples([])
+    pe = tmp_path / "empty.csv"
+    pe.write_text("\n")
+    with pytest.raises(ValueError, match="empty latency trace"):
+        LatencyTable.from_trace(str(pe))
+    ph = tmp_path / "only_header.csv"
+    ph.write_text("client,latency_s\n")
+    with pytest.raises(ValueError, match="empty latency trace"):
+        LatencyTable.from_trace(str(ph))
+    pz = tmp_path / "zero.json"
+    pz.write_text(json.dumps({"values": [1.0, 2.0], "probs": [0.0, 0.0]}))
+    with pytest.raises(ValueError, match="sum to > 0"):
+        LatencyTable.from_trace(str(pz))
+    with pytest.raises(ValueError, match="ring_cap"):
+        Scenario("r", LatencyTable.constant(1.0), ring_cap=1)
+    with pytest.raises(TypeError, match="LatencyTable"):
+        Scenario("t", 3.0)
+
+
+def test_per_client_trace_ingestion(tmp_path):
+    rng = np.random.default_rng(0)
+    fast = list(0.05 + 0.05 * rng.random(100))
+    slow = list(1.0 + rng.random(100))
+    pj = tmp_path / "per_client.json"
+    pj.write_text(json.dumps({"clients": {"7": slow, "3": fast}}))
+    pc = tmp_path / "per_client.csv"
+    pc.write_text("client,latency_s\n"
+                  + "\n".join(f"3,{s}" for s in fast)
+                  + "\n" + "\n".join(f"7,{s}" for s in slow))
+    sj = scenario_from_trace(str(pj), per_client=True, n_bins=4)
+    sc = scenario_from_trace(str(pc), per_client=True, n_bins=4)
+    assert sj.tables == sc.tables           # ids sort numerically
+    assert len(sj.tables) == 2
+    assert sj.tables[0].mean() < 0.2 < sj.tables[1].mean()
+    assert sj.assignment.kind == "cycle"
+    # engine clients alternate tables 0/1 cyclically
+    plan = scenario_plan(sj, C=4, seed=0, dt=0.05)
+    np.testing.assert_array_equal(plan.table_id, [0, 1, 0, 1])
+    assert plan.max_lat_ticks > 1
+    pb = tmp_path / "no_client.csv"
+    pb.write_text("latency_s\n0.5\n")
+    with pytest.raises(ValueError, match="client"):
+        scenario_from_trace(str(pb), per_client=True)
+    pm = tmp_path / "flat.json"
+    pm.write_text(json.dumps([0.1, 0.2]))
+    with pytest.raises(ValueError, match="clients"):
+        scenario_from_trace(str(pm), per_client=True)
+
+
 # --- availability models ----------------------------------------------------
 
 def test_diurnal_tick_mask_and_windows_agree_on_duty():
@@ -172,6 +317,73 @@ def test_churn_mask_duty_and_validation():
         Churn(p_available=0.0)
     with pytest.raises(ValueError):
         Diurnal(on_frac=1.5)
+
+
+def test_regional_churn_duty_correlation_and_validation():
+    """Within-region availability is positively correlated (the shared
+    per-(epoch, region) outage factor), cross-region draws stay
+    independent, and the marginal duty is the advertised p_available."""
+    av = RegionalChurn(n_regions=2, p_available=0.7, p_region_up=0.8,
+                       epoch_s=4.0)
+    assert av.duty == 0.7
+    C, E = 16, 384
+    mask = av.tick_plan(C=C, dt=1.0, seed=3)
+    reg = av.regions(C)
+    # one sample per epoch: draws are independent across epochs
+    M = np.stack([np.asarray(mask(jnp.int32(4 * e))) for e in range(E)])
+    duty = M.mean()
+    assert abs(duty - 0.7) < 0.05
+    X = M.astype(np.float64)
+    corr = np.corrcoef(X.T)
+    same = reg[:, None] == reg[None, :]
+    off_diag = ~np.eye(C, dtype=bool)
+    within = corr[same & off_diag]
+    cross = corr[~same]
+    # analytic within-region corr: (p^2/p_reg - p^2) / (p (1-p)) ~ 0.58
+    assert within.mean() > 0.3, within.mean()
+    assert abs(cross.mean()) < 0.1, cross.mean()
+    # explicit region ids + validation
+    av2 = RegionalChurn(n_regions=2, region_of=(0, 0, 1, 1))
+    np.testing.assert_array_equal(av2.regions(4), [0, 0, 1, 1])
+    with pytest.raises(ValueError, match="region_of"):
+        av2.regions(3)                       # length mismatch
+    with pytest.raises(ValueError, match="lie in"):
+        RegionalChurn(n_regions=2, region_of=(0, 5))
+    with pytest.raises(ValueError, match="p_region_up"):
+        RegionalChurn(p_available=0.9, p_region_up=0.5)
+
+
+def test_renewal_churn_duty_chi_square_and_validation():
+    """The cohort engines' per-tick renewal approximation hits the
+    analytic stationary duty on_rate / (on_rate + off_rate), pinned by
+    a chi-square test over epoch-independent samples; the event
+    simulator's continuous windows integrate to the same duty
+    (the statistical-equivalence contract)."""
+    av = RenewalChurn(on_rate=1.0 / 4.0, off_rate=1.0 / 12.0)
+    duty = av.duty
+    assert abs(duty - 0.75) < 1e-12
+    C, E = 32, 64
+    mask = av.tick_plan(C=C, dt=1.0, seed=0)
+    epoch_t = max(1, round(av.epoch_cycles * av.mean_cycle_s / 1.0))
+    # one sample per epoch and client: independent Bernoulli(duty)
+    on = sum(int(np.asarray(mask(jnp.int32(e * epoch_t + 3))).sum())
+             for e in range(E))
+    n = C * E
+    exp_on, exp_off = n * duty, n * (1.0 - duty)
+    chi2 = ((on - exp_on) ** 2 / exp_on
+            + ((n - on) - exp_off) ** 2 / exp_off)
+    assert chi2 < _chi2_bound(1), (chi2, on / n)
+    # event-side: continuous on-time fraction integrates to the duty
+    w = av.windows(C=8, seed=0)
+    frac = np.mean([w.on_time(c, 0.0, 4000.0) / 4000.0 for c in range(8)])
+    assert abs(frac - duty) < 0.05
+    # advance() inverts on_time() across switch boundaries
+    t1 = w.advance(0, 3.0, 25.0)
+    assert abs(w.on_time(0, 3.0, t1) - 25.0) < 1e-9
+    with pytest.raises(ValueError, match="on_rate"):
+        RenewalChurn(on_rate=0.0)
+    with pytest.raises(ValueError, match="epoch_cycles"):
+        RenewalChurn(epoch_cycles=10.0, n_draws=8)
 
 
 def test_masked_client_accrues_no_credit_and_sends_no_update():
@@ -211,8 +423,8 @@ def test_speed_models_normalized_and_long_tailed():
 # --- registry ---------------------------------------------------------------
 
 def test_registry_presets_resolve():
-    assert {"uniform", "mobile_diurnal", "iot_straggler"} <= set(
-        scenario_names())
+    assert {"uniform", "mobile_diurnal", "iot_straggler",
+            "geo_regional", "sensor_renewal"} <= set(scenario_names())
     scn = get_scenario("mobile_diurnal")
     assert get_scenario(scn) is scn       # passthrough
     with pytest.raises(KeyError):
@@ -287,6 +499,123 @@ def test_stochastic_scenario_parity_with_dp_and_gate():
     assert res_co["final"]["broadcasts"] == res_dv["final"]["broadcasts"]
 
 
+def test_three_way_parity_per_client_tables_with_dp():
+    """Heterogeneity v2 acceptance: per-client latency tables + diurnal
+    availability at d=1 — event vs cohort trajectory-equal (at d=1
+    arrival timing only reorders float sums), host-cohort vs device
+    bitwise, and STILL bitwise once DP noise + round clip are on (DP
+    noise chains differ between the event and cohort engines by design,
+    so the event leg of the DP comparison is message-count only)."""
+    scn = Scenario(
+        "pc3", (LatencyTable.from_lognormal(2.0, 0.7, 8),
+                LatencyTable.from_uniform(1.0, 20.0, 6)),
+        Diurnal(period_s=64.0, on_frac=0.6),
+        assignment=TableAssignment("explicit", table_id=(0, 1, 1, 0)))
+    kw = dict(n_clients=4, sizes_per_client=[[10, 20, 30]] * 4,
+              round_stepsizes=[0.1, 0.08, 0.06], d=1, seed=0,
+              speeds=[1.0, 0.8, 1.2, 0.9], scenario=scn)
+    task = _task(n=500, d=16, seed=7, sample_seed=13)
+    res_ev = AsyncFLSimulator(task, **kw).run(max_rounds=3)
+    res_co = CohortSimulator(task, block=8, **kw).run(max_rounds=3)
+    res_dv = DeviceCohortSimulator(task, block=8, **kw).run(max_rounds=3)
+    assert (res_ev["final"]["messages"] == res_co["final"]["messages"]
+            == res_dv["final"]["messages"])
+    np.testing.assert_array_equal(np.asarray(res_co["model"]["w"]),
+                                  np.asarray(res_dv["model"]["w"]))
+    assert float(res_co["model"]["b"]) == float(res_dv["model"]["b"])
+    np.testing.assert_allclose(np.asarray(res_ev["model"]["w"]),
+                               np.asarray(res_dv["model"]["w"]),
+                               atol=1e-4)
+    # DP leg: same scenario, noise + round clip on — host-vs-device
+    # stays bit-identical, messages match the event engine's schedule
+    task_dp = _task(n=500, d=16, seed=7, sample_seed=13, dp_clip=0.1,
+                    dp_sigma=1.0)
+    dp_co = CohortSimulator(task_dp, block=8, dp_round_clip=0.5,
+                            **kw).run(max_rounds=3)
+    dp_dv = DeviceCohortSimulator(task_dp, block=8, dp_round_clip=0.5,
+                                  **kw).run(max_rounds=3)
+    np.testing.assert_array_equal(np.asarray(dp_co["model"]["w"]),
+                                  np.asarray(dp_dv["model"]["w"]))
+    assert float(dp_co["model"]["b"]) == float(dp_dv["model"]["b"])
+    assert dp_co["final"]["messages"] == dp_dv["final"]["messages"] \
+        == res_ev["final"]["messages"]
+
+
+def test_regional_churn_parity_with_dp_and_gate():
+    """RegionalChurn (correlated outages) + DP + round clip + d=2 +
+    multi-tick latency: host-cohort vs device stays bit-identical."""
+    task = _task(dp_clip=0.1, dp_sigma=2.0)
+    scn = Scenario("regdp", LatencyTable.from_uniform(4.0, 40.0, 6),
+                   RegionalChurn(n_regions=2, p_available=0.8,
+                                 p_region_up=0.9, epoch_s=8.0))
+    kw = dict(n_clients=5, sizes_per_client=[4, 6, 8],
+              round_stepsizes=[0.1, 0.08, 0.06], d=2, seed=3,
+              speeds=[1.0, 0.6, 1.4, 0.8, 1.1], block=4,
+              dp_round_clip=0.5, scenario=scn)
+    res_co = CohortSimulator(task, **kw).run(max_rounds=3)
+    res_dv = DeviceCohortSimulator(task, **kw).run(max_rounds=3)
+    np.testing.assert_array_equal(np.asarray(res_co["model"]["w"]),
+                                  np.asarray(res_dv["model"]["w"]))
+    assert float(res_co["model"]["b"]) == float(res_dv["model"]["b"])
+    assert res_co["final"]["messages"] == res_dv["final"]["messages"]
+    assert res_co["final"]["broadcasts"] == res_dv["final"]["broadcasts"]
+
+
+def test_renewal_churn_runs_on_all_three_engines():
+    """RenewalChurn is the churn model the event simulator ACCEPTS
+    (continuous renewal windows in its lazy-advance schedule) — it
+    completes the run; the cohort engines run their per-tick
+    approximation bit-identically to each other."""
+    task = _task(sample_seed=3)
+    scn = Scenario("ren", LatencyTable.constant(0.05),
+                   RenewalChurn(on_rate=1.0 / 8.0, off_rate=1.0 / 24.0))
+    kw = dict(n_clients=4, sizes_per_client=[8, 12],
+              round_stepsizes=[0.1, 0.08], d=1, seed=1)
+    res_ev = AsyncFLSimulator(task, scenario=scn, **kw).run(max_rounds=2)
+    res_co = CohortSimulator(task, block=8, scenario=scn,
+                             **kw).run(max_rounds=2)
+    res_dv = DeviceCohortSimulator(task, block=8, scenario=scn,
+                                   **kw).run(max_rounds=2)
+    assert (res_ev["final"]["round"] == res_co["final"]["round"]
+            == res_dv["final"]["round"] == 2)
+    # off-windows stretch virtual time on every engine
+    assert res_ev["final"]["time"] > 0.0
+    np.testing.assert_array_equal(np.asarray(res_co["model"]["w"]),
+                                  np.asarray(res_dv["model"]["w"]))
+    assert float(res_co["model"]["b"]) == float(res_dv["model"]["b"])
+    # d=1 hard gate: same message count on every engine regardless of
+    # which churn sample path each engine realizes
+    assert res_co["final"]["messages"] == res_dv["final"]["messages"]
+
+
+def test_overflow_bucket_bounded_ring_and_parity():
+    """Heavy-tail ring cost acceptance: with a latency tail spanning
+    far more ticks than Scenario.ring_cap, the device engine's update
+    ring (and unrolled scatter) stays bounded at next_pow2(ring_cap)
+    while far arrivals route through the overflow bucket — and the
+    trajectory stays bit-identical to the host engine, which splits its
+    arrival buckets at the same plan boundary."""
+    task = _task(dp_clip=0.1, dp_sigma=2.0)
+    scn = Scenario("tail", LatencyTable.from_uniform(1.0, 200.0, 16),
+                   ring_cap=8)
+    kw = dict(n_clients=6, sizes_per_client=[4, 6], d=2, seed=2,
+              round_stepsizes=[0.1, 0.08], block=4, dp_round_clip=0.5,
+              scenario=scn)
+    co = CohortSimulator(task, **kw)
+    dv = DeviceCohortSimulator(task, **kw)
+    eng = dv.engine
+    assert eng.L == 8                        # capped, not next_pow2(51)
+    assert eng._plan.max_lat_ticks > eng.L   # tail really exceeds it
+    assert eng.F > 0                         # overflow path is active
+    res_co = co.run(max_rounds=3)
+    res_dv = dv.run(max_rounds=3)
+    np.testing.assert_array_equal(np.asarray(res_co["model"]["w"]),
+                                  np.asarray(res_dv["model"]["w"]))
+    assert float(res_co["model"]["b"]) == float(res_dv["model"]["b"])
+    assert res_co["final"]["messages"] == res_dv["final"]["messages"]
+    assert res_co["final"]["broadcasts"] == res_dv["final"]["broadcasts"]
+
+
 def test_event_sim_scenario_speeds_and_diurnal_slowdown():
     """Scenario speeds flow into the event sim when the caller gives
     none, and diurnal off-windows stretch virtual completion time
@@ -311,10 +640,13 @@ def test_event_sim_scenario_speeds_and_diurnal_slowdown():
 
 def test_event_sim_rejects_churn_scenario():
     task = _task()
+    kw = dict(n_clients=2, sizes_per_client=[2], round_stepsizes=[0.1],
+              d=1, seed=0)
     with pytest.raises(ValueError, match="continuous"):
-        AsyncFLSimulator(task, n_clients=2, sizes_per_client=[2],
-                         round_stepsizes=[0.1], d=1, seed=0,
-                         scenario="iot_straggler")
+        AsyncFLSimulator(task, scenario="iot_straggler", **kw)
+    # regional churn is tick-hash addressed too — rejected the same way
+    with pytest.raises(ValueError, match="continuous"):
+        AsyncFLSimulator(task, scenario="geo_regional", **kw)
 
 
 def test_scenario_and_legacy_latency_are_exclusive():
