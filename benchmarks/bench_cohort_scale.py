@@ -49,7 +49,10 @@ L = next_pow2(max latency ticks) and the per-slot scatter unrolls with
 it) — recording ring length L, compile+warm seconds, and steady-state
 run seconds for each.
 
-Writes ``BENCH_cohort.json`` (cwd) with the raw numbers, including
+Writes ``BENCH_cohort.json`` (cwd) with the raw numbers.  Each cohort /
+device entry carries a ``phases`` block — ``compile_s`` (first run,
+cold jit cache), ``warmup_s`` (second run, warm jit), ``steady_s``
+(median of REPS fresh-simulator runs) and ``clients_per_sec`` — plus
 ``speedup_vs_event`` and ``speedup_vs_cohort`` for the device engine —
 the acceptance number is device >= 5x host-cohort at C=4096 on the
 FedSGD workload.  The file is merge-updated per workload key, so partial
@@ -91,6 +94,25 @@ def _time_run(sim, rounds: int) -> float:
 def _median_run(mk_sim, rounds: int, reps: int = REPS) -> float:
     return statistics.median(_time_run(mk_sim(), rounds)
                              for _ in range(reps))
+
+
+def _engine_phases(mk_sim, rounds: int, C: int) -> dict:
+    """Per-phase timing for one engine config (repro.telemetry hooks):
+    ``compile`` is the first run on a cold jit cache, ``warmup`` the
+    next (warm jit, cold data paths), ``steady`` the median of REPS
+    fresh-simulator runs on the warm task.  The steady number is the
+    one throughput claims quote; compile/warmup make the amortization
+    visible in BENCH_cohort.json instead of a single aggregate."""
+    compile_s = _time_run(mk_sim(), rounds)
+    warmup_s = _time_run(mk_sim(), rounds)
+    steady_s = _median_run(mk_sim, rounds)
+    return {
+        "sec": steady_s,
+        "client_rounds_per_sec": C * rounds / steady_s,
+        "phases": {"compile_s": compile_s, "warmup_s": warmup_s,
+                   "steady_s": steady_s,
+                   "clients_per_sec": C / steady_s},
+    }
 
 
 def _merge_write(report):
@@ -140,23 +162,20 @@ def run_model_scale(report=None):
         cr = C * rounds
         co_cfg = FLConfig(engine="cohort", cohort_block=4)
         dv_cfg = FLConfig(engine="device", cohort_block=4)
-        _time_run(make_simulator(co_cfg, co_task, n_clients=C, **kw),
-                  rounds)
-        _time_run(make_simulator(dv_cfg, co_task, n_clients=C, **kw),
-                  rounds)
-        dt_co = _median_run(
+        co = _engine_phases(
             lambda: make_simulator(co_cfg, co_task, n_clients=C, **kw),
-            rounds)
-        dt_dv = _median_run(
+            rounds, C)
+        dv = _engine_phases(
             lambda: make_simulator(dv_cfg, co_task, n_clients=C, **kw),
-            rounds)
-        tp_co, tp_dv = cr / dt_co, cr / dt_dv
+            rounds, C)
+        tp_co = co["client_rounds_per_sec"]
+        tp_dv = dv["client_rounds_per_sec"]
+        dv["speedup_vs_cohort"] = tp_dv / tp_co
+        dt_dv = dv["sec"]
         entry = {
             "clients": C, "rounds": rounds, "sizes": sizes,
             "arch": cfg.arch_id, "flat_D": co_task.D,
-            "cohort": {"sec": dt_co, "client_rounds_per_sec": tp_co},
-            "device": {"sec": dt_dv, "client_rounds_per_sec": tp_dv,
-                       "speedup_vs_cohort": tp_dv / tp_co},
+            "cohort": co, "device": dv,
         }
         derived = (f"D={co_task.D}; device {tp_dv:,.1f} cr/s; "
                    f"cohort {tp_co:,.1f}; dev/cohort "
@@ -205,25 +224,21 @@ def run_scenarios(report=None):
                               scenario=preset)
             dv_cfg = FLConfig(engine="device", cohort_block=8,
                               scenario=preset)
-            _time_run(make_simulator(co_cfg, co_task, n_clients=C, **kw),
-                      rounds)
-            _time_run(make_simulator(dv_cfg, co_task, n_clients=C, **kw),
-                      rounds)
-            dt_co = _median_run(
+            co = _engine_phases(
                 lambda: make_simulator(co_cfg, co_task, n_clients=C,
-                                       **kw), rounds)
-            dt_dv = _median_run(
+                                       **kw), rounds, C)
+            dv = _engine_phases(
                 lambda: make_simulator(dv_cfg, co_task, n_clients=C,
-                                       **kw), rounds)
-            tp_co, tp_dv = cr / dt_co, cr / dt_dv
+                                       **kw), rounds, C)
+            tp_co = co["client_rounds_per_sec"]
+            tp_dv = dv["client_rounds_per_sec"]
+            dv["speedup_vs_cohort"] = tp_dv / tp_co
             report["scenario_smoke"][preset][str(C)] = {
                 "clients": C, "rounds": rounds, "iters_per_round": iters,
-                "cohort": {"sec": dt_co, "client_rounds_per_sec": tp_co},
-                "device": {"sec": dt_dv, "client_rounds_per_sec": tp_dv,
-                           "speedup_vs_cohort": tp_dv / tp_co},
+                "cohort": co, "device": dv,
             }
             rows.append((f"cohort_scale_scenario_{preset}_C{C}",
-                         dt_dv * 1e6,
+                         dv["sec"] * 1e6,
                          f"device {tp_dv:,.0f} cr/s; cohort {tp_co:,.0f};"
                          f" dev/cohort {tp_dv / tp_co:.1f}x"))
     if own_report:
@@ -309,27 +324,23 @@ def run():
             co_task = ctasks[C]
             cr = C * rounds    # client-rounds per run
 
-            # one warm run per engine compiles [C, D] block/segment fns
+            # first run per engine compiles [C, D] block/segment fns;
+            # _engine_phases records it as the compile phase
             co_cfg = FLConfig(engine="cohort", cohort_block=64)
             dv_cfg = FLConfig(engine="device", cohort_block=64)
-            _time_run(make_simulator(co_cfg, co_task, n_clients=C, **kw),
-                      rounds)
-            _time_run(make_simulator(dv_cfg, co_task, n_clients=C, **kw),
-                      rounds)
-
-            dt_co = _median_run(
+            co = _engine_phases(
                 lambda: make_simulator(co_cfg, co_task, n_clients=C, **kw),
-                rounds)
-            dt_dv = _median_run(
+                rounds, C)
+            dv = _engine_phases(
                 lambda: make_simulator(dv_cfg, co_task, n_clients=C, **kw),
-                rounds)
-            tp_co, tp_dv = cr / dt_co, cr / dt_dv
+                rounds, C)
+            tp_co = co["client_rounds_per_sec"]
+            tp_dv = dv["client_rounds_per_sec"]
+            dv["speedup_vs_cohort"] = tp_dv / tp_co
 
             entry = {
                 "clients": C, "rounds": rounds, "iters_per_round": iters,
-                "cohort": {"sec": dt_co, "client_rounds_per_sec": tp_co},
-                "device": {"sec": dt_dv, "client_rounds_per_sec": tp_dv,
-                           "speedup_vs_cohort": tp_dv / tp_co},
+                "cohort": co, "device": dv,
             }
             derived = (f"device {tp_dv:,.0f} cr/s; cohort {tp_co:,.0f}; "
                        f"dev/cohort {tp_dv / tp_co:.1f}x")
@@ -344,7 +355,7 @@ def run():
                 entry["device"]["speedup_vs_event"] = tp_dv / tp_ev
                 derived += f"; dev/event {tp_dv / tp_ev:.0f}x"
             report[wname][str(C)] = entry
-            rows.append((f"cohort_scale_{wname}_C{C}", dt_dv * 1e6,
+            rows.append((f"cohort_scale_{wname}_C{C}", dv["sec"] * 1e6,
                          derived))
 
     rows += run_model_scale(report)

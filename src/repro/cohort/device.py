@@ -72,6 +72,8 @@ from repro.kernels.cohort_dp import cohort_clip_noise
 from repro.scenarios import (get_scenario, legacy_latency_scenario,
                              scenario_plan)
 from repro.sharding import cohort_mesh, cohort_shardings
+from repro.telemetry import (STALE_BINS, PhaseTimer, build_report,
+                             open_trace, update_msg_bytes)
 
 # Unroll bound for the overflow bucket's per-completion-tick far-group
 # loop: one iteration per distinct far arrival tick.  Most tables have a
@@ -102,6 +104,8 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
     noise_base = jax.random.PRNGKey(seed ^ 0x5EED)   # == host engine's
     run_block = ctask.block_body(b_stat)
     cidx = jnp.arange(C)
+    S = STALE_BINS
+    upd_bytes = jnp.int32(update_msg_bytes(D))
     # scenario closures (repro.scenarios.ScenarioPlan): message-addressed
     # latency-tick draws and the availability mask, pure jax ops the host
     # engine evaluates identically — the bit-parity contract
@@ -118,6 +122,7 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
             #    cascade-fire every round whose H just filled
             slot = t & (L - 1)
             cnt_row = st.upd_cnt[slot]                       # [R]
+            ks_row = st.upd_ks[slot]                         # [R]
             if F > 0:
                 ovf_hit = st.ovf_at == t                     # [Q]
                 # entries merge by arrival tick at insert, so at most
@@ -130,13 +135,18 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                                     axis=0),
                             jnp.sum(st.ovf_cnt
                                     * ovf_hit.astype(jnp.int32)[:, None],
+                                    axis=0),
+                            jnp.sum(st.ovf_ks
+                                    * ovf_hit.astype(jnp.int32)[:, None],
                                     axis=0))
 
-                ovf_vec_t, ovf_cnt_t = lax.cond(
+                ovf_vec_t, ovf_cnt_t, ovf_ks_t = lax.cond(
                     jnp.any(ovf_hit), pop_ovf,
                     lambda _: (jnp.zeros((D,), jnp.float32),
+                               jnp.zeros((R,), jnp.int32),
                                jnp.zeros((R,), jnp.int32)), None)
                 cnt_total = cnt_row + ovf_cnt_t
+                ks_total = ks_row + ovf_ks_t
                 # overflow + ring_slot in THIS order — the host engine
                 # applies far + near the same way (bit parity)
                 v = jnp.where(jnp.sum(cnt_total) > 0,
@@ -145,16 +155,27 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                 ovf_vec = jnp.where(ovf_hit[:, None], 0.0, st.ovf_vec)
                 ovf_at = jnp.where(ovf_hit, 0, st.ovf_at)
                 ovf_cnt = jnp.where(ovf_hit[:, None], 0, st.ovf_cnt)
+                ovf_ks = jnp.where(ovf_hit[:, None], 0, st.ovf_ks)
             else:
                 cnt_total = cnt_row
+                ks_total = ks_row
                 v = jnp.where(jnp.sum(cnt_row) > 0,
                               st.v - st.upd_vec[slot], st.v)
-                ovf_vec, ovf_at, ovf_cnt = (st.ovf_vec, st.ovf_at,
-                                            st.ovf_cnt)
+                ovf_vec, ovf_at, ovf_cnt, ovf_ks = (
+                    st.ovf_vec, st.ovf_at, st.ovf_cnt, st.ovf_ks)
             upd_vec = st.upd_vec.at[slot].set(
                 jnp.zeros((D,), jnp.float32))
             upd_cnt = st.upd_cnt.at[slot].set(jnp.zeros((R,), jnp.int32))
+            upd_ks = st.upd_ks.at[slot].set(jnp.zeros((R,), jnp.int32))
             h_counts = st.h_counts + cnt_total
+            # staleness-at-apply census: slot r of ks_total counts the
+            # arrivals whose sender saw broadcast counter r (mod R); the
+            # true staleness tau = server_k - k_send is in [0, d-1], so
+            # its mod-R residue against the PRE-cascade server_k is
+            # exact — the host engine bins the same quantity per pair
+            tau = (st.server_k - jnp.arange(R, dtype=jnp.int32)) & (R - 1)
+            stale_hist = st.stale_hist.at[
+                jnp.minimum(tau, S - 1)].add(ks_total)
 
             def casc_cond(c):
                 sk, hc = c[0], c[1]
@@ -218,10 +239,14 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
             # 4) round completions: clip/noise, bucket scatter, advance —
             #    all [C, D]-sized work gated on any round finishing
             done = active & (h >= s_i)
-            messages = st.messages + jnp.sum(done.astype(jnp.int32))
+            done_i32 = done.astype(jnp.int32)
+            messages = st.messages + jnp.sum(done_i32)
+            part = st.part + done_i32
+            bytes_up = st.bytes_up + done_i32 * upd_bytes
 
             def do_complete(ops):
-                w, U, upd_vec, upd_cnt, ovf_vec, ovf_at, ovf_cnt, err = ops
+                (w, U, upd_vec, upd_cnt, upd_ks, ovf_vec, ovf_at,
+                 ovf_cnt, ovf_ks, ovf_hwm, far_msgs, err) = ops
                 if dp_on:
                     nk = jax.random.fold_in(noise_base, t)
                     noised, _ = cohort_clip_noise(
@@ -259,12 +284,22 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                 oh_r = ((st.i & (R - 1))[:, None]
                         == jnp.arange(R)[None, :]).astype(jnp.int32)
                 upd_cnt = upd_cnt + jnp.einsum("cl,cr->lr", oh_l, oh_r)
+                # sender-k census ring, same layout keyed by the k each
+                # finishing client saw at send (k is post-delivery for
+                # this tick — the host engine reads st.k[c] at the same
+                # point in its _finish_rounds)
+                oh_s = ((k & (R - 1))[:, None]
+                        == jnp.arange(R)[None, :]).astype(jnp.int32)
+                upd_ks = upd_ks + jnp.einsum("cl,cr->lr", oh_l, oh_s)
                 if F > 0:
                     far_mask = done & (arr_off >= L)
                     arr_tick = t + arr_off
+                    far_msgs = far_msgs + jnp.sum(
+                        far_mask.astype(jnp.int32))
 
                     def do_far(fops):
-                        ovf_vec, ovf_at, ovf_cnt, err = fops
+                        ovf_vec, ovf_at, ovf_cnt, ovf_ks, ovf_hwm, \
+                            err = fops
                         remaining = far_mask
                         # one unroll step per DISTINCT far arrival tick,
                         # ascending (matches the host's np.unique order);
@@ -283,6 +318,9 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                             cnt = jnp.sum(
                                 oh_r * grp.astype(jnp.int32)[:, None],
                                 axis=0)
+                            cnt_ks = jnp.sum(
+                                oh_s * grp.astype(jnp.int32)[:, None],
+                                axis=0)
                             match = ovf_at == tick_q
                             has_match = jnp.any(match)
                             free = ovf_at == 0
@@ -296,25 +334,38 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                             ovf_cnt = ovf_cnt.at[idx].set(
                                 jnp.where(write, ovf_cnt[idx] + cnt,
                                           ovf_cnt[idx]))
+                            ovf_ks = ovf_ks.at[idx].set(
+                                jnp.where(write, ovf_ks[idx] + cnt_ks,
+                                          ovf_ks[idx]))
                             ovf_at = ovf_at.at[idx].set(
                                 jnp.where(write, tick_q, ovf_at[idx]))
                             err = err | (any_grp & ~ok).astype(jnp.int32)
                             remaining = remaining & ~grp
                         err = err | jnp.any(remaining).astype(jnp.int32)
-                        return ovf_vec, ovf_at, ovf_cnt, err
+                        # occupancy high-water mark, sampled after this
+                        # tick's inserts — one occupied slot per pending
+                        # far arrival tick, the host engine's
+                        # len(far_contrib) at the same point
+                        ovf_hwm = jnp.maximum(
+                            ovf_hwm,
+                            jnp.sum((ovf_at != 0).astype(jnp.int32)))
+                        return (ovf_vec, ovf_at, ovf_cnt, ovf_ks,
+                                ovf_hwm, err)
 
-                    ovf_vec, ovf_at, ovf_cnt, err = lax.cond(
+                    (ovf_vec, ovf_at, ovf_cnt, ovf_ks, ovf_hwm,
+                     err) = lax.cond(
                         jnp.any(far_mask), do_far, lambda fops: fops,
-                        (ovf_vec, ovf_at, ovf_cnt, err))
+                        (ovf_vec, ovf_at, ovf_cnt, ovf_ks, ovf_hwm,
+                         err))
                 U = jnp.where(done[:, None], 0.0, sent)
-                return (w, U, upd_vec, upd_cnt, ovf_vec, ovf_at,
-                        ovf_cnt, err)
+                return (w, U, upd_vec, upd_cnt, upd_ks, ovf_vec,
+                        ovf_at, ovf_cnt, ovf_ks, ovf_hwm, far_msgs, err)
 
-            (w, U, upd_vec, upd_cnt, ovf_vec, ovf_at, ovf_cnt,
-             err) = lax.cond(
+            (w, U, upd_vec, upd_cnt, upd_ks, ovf_vec, ovf_at, ovf_cnt,
+             ovf_ks, ovf_hwm, far_msgs, err) = lax.cond(
                 jnp.any(done), do_complete, lambda ops: ops,
-                (w, U, upd_vec, upd_cnt, ovf_vec, ovf_at, ovf_cnt,
-                 st.err))
+                (w, U, upd_vec, upd_cnt, upd_ks, ovf_vec, ovf_at,
+                 ovf_cnt, ovf_ks, st.ovf_hwm, st.far_msgs, st.err))
             i = jnp.where(done, st.i + 1, st.i)
             h = jnp.where(done, 0, h)
             credit = jnp.where(
@@ -326,7 +377,9 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                 upd_cnt=upd_cnt, h_counts=h_counts, bc_v=bc_v,
                 bc_k=bc_k, bc_at=bc_at, ovf_vec=ovf_vec, ovf_at=ovf_at,
                 ovf_cnt=ovf_cnt, err=err, messages=messages,
-                broadcasts=broadcasts)
+                broadcasts=broadcasts, part=part, bytes_up=bytes_up,
+                stale_hist=stale_hist, upd_ks=upd_ks, ovf_ks=ovf_ks,
+                ovf_hwm=ovf_hwm, far_msgs=far_msgs)
 
         return lax.while_loop(
             lambda s: ((s.server_k < target_k) & (s.tick < tick_limit)
@@ -346,7 +399,8 @@ class DeviceCohortEngine:
                  latency=None, seed: int = 0, block: int = 64,
                  dp_sigma: float = 0.0, dp_clip: float = 0.0,
                  dp_round_clip: float = 0.0, use_dp_kernel: bool = True,
-                 interpret: bool = True, scenario=None):
+                 interpret: bool = True, scenario=None, trace=None,
+                 dp_delta: float = 1e-5):
         self.ctask = ctask
         C = ctask.C
         self.C = C
@@ -381,6 +435,8 @@ class DeviceCohortEngine:
         self.dp_round_clip = float(dp_round_clip)
         self.use_dp_kernel = bool(use_dp_kernel)
         self.interpret = bool(interpret)
+        self.dp_delta = float(dp_delta)
+        self._trace = open_trace(trace)
 
         # ring capacities and the static per-tick block size: n is bounded
         # by the round size AND by the credit cap (2 * block post-accrual).
@@ -436,7 +492,12 @@ class DeviceCohortEngine:
             ovf_at=jnp.zeros((Q,), jnp.int32),
             ovf_cnt=jnp.zeros((Q, R), jnp.int32),
             err=jnp.int32(0),
-            messages=jnp.int32(0), broadcasts=jnp.int32(0))
+            messages=jnp.int32(0), broadcasts=jnp.int32(0),
+            part=zc(), bytes_up=zc(),
+            stale_hist=jnp.zeros((STALE_BINS,), jnp.int32),
+            upd_ks=jnp.zeros((L, R), jnp.int32),
+            ovf_ks=jnp.zeros((Q, R), jnp.int32),
+            ovf_hwm=jnp.int32(0), far_msgs=jnp.int32(0))
         return DeviceCohortState(**{
             f: jax.device_put(val, self._shardings[f])
             for f, val in fields.items()})
@@ -492,13 +553,18 @@ class DeviceCohortEngine:
         seg = self._segment_fn()
         st = self.state
         next_eval = eval_every
+        timer = PhaseTimer()
+        first_segment = True
         while True:
             target = min(next_eval, max_rounds)
-            st = seg(st, self._etas_dev, self._sizes_dev,
-                     self._accrual_dev, jnp.int32(target),
-                     jnp.int32(max_ticks))
-            self.state = st
-            sk = int(st.server_k)            # the one sync per segment
+            with timer.phase("first_segment" if first_segment
+                             else "steady"):
+                st = seg(st, self._etas_dev, self._sizes_dev,
+                         self._accrual_dev, jnp.int32(target),
+                         jnp.int32(max_ticks))
+                self.state = st
+                sk = int(st.server_k)        # the one sync per segment
+            first_segment = False
             if sk < target:
                 if int(st.err) != 0:
                     raise RuntimeError(
@@ -523,11 +589,55 @@ class DeviceCohortEngine:
                          messages=int(st.messages))
                 self.history.append(m)
                 next_eval = sk + eval_every
+                self._emit_segment()
             if sk >= max_rounds:
                 break
         final = evals(st.v)
+        # overflow telemetry surfaced for ring_cap tuning: the high-water
+        # mark against the Q-slot capacity plus the far-routed share
         final.update(round=sk, time=int(st.tick) * self.dt,
                      messages=int(st.messages),
-                     broadcasts=int(st.broadcasts))
+                     broadcasts=int(st.broadcasts),
+                     overflow_hwm=int(st.ovf_hwm),
+                     overflow_slots=self.Q if self.F else 0,
+                     far_messages=int(st.far_msgs))
+        report = self.telemetry_report(wall=timer.as_dict())
+        if self._trace:
+            self._trace.emit("report", **report.to_dict())
+            self._trace.close()
         return {"final": final, "history": self.history,
-                "model": self.ctask.unflatten(st.v)}
+                "model": self.ctask.unflatten(st.v), "telemetry": report}
+
+    # -- telemetry ----------------------------------------------------------
+    def _emit_segment(self) -> None:
+        if not self._trace:
+            return
+        st = self.state
+        self._trace.emit(
+            "segment", engine="device", round=int(st.server_k),
+            tick=int(st.tick), messages=int(st.messages),
+            broadcasts=int(st.broadcasts),
+            bytes_up_total=int(np.asarray(st.bytes_up,
+                                          dtype=np.int64).sum()),
+            staleness_hist=np.asarray(st.stale_hist),
+            overflow_hwm=int(st.ovf_hwm))
+
+    def telemetry_report(self, wall=None):
+        """MetricsReport from the on-device counters (syncs the state)."""
+        st = self.state
+        src_task = getattr(self.ctask, "task", None)
+        return build_report(
+            engine="device", clients=self.C, flat_dim=self.D,
+            rounds=int(st.server_k), messages=int(st.messages),
+            broadcasts=int(st.broadcasts),
+            participation=np.asarray(st.part, dtype=np.int64),
+            bytes_up=np.asarray(st.bytes_up, dtype=np.int64),
+            staleness_hist=np.asarray(st.stale_hist, dtype=np.int64),
+            overflow_hwm=int(st.ovf_hwm),
+            overflow_slots=self.Q if self.F else 0,
+            far_messages=int(st.far_msgs),
+            ticks=int(st.tick),
+            dp_sigma=self.dp_sigma, dp_delta=self.dp_delta,
+            n_examples=(int(src_task.X.shape[0])
+                        if hasattr(src_task, "X") else None),
+            sizes_per_client=self.sizes, wall=wall)

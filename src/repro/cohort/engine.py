@@ -44,6 +44,8 @@ from repro.cohort.state import (FRAC_BITS, BroadcastRing, CohortState,
                                 next_pow2, pad_sizes, speed_accrual)
 from repro.kernels.cohort_dp import cohort_clip_noise
 from repro.scenarios import get_scenario, scenario_plan
+from repro.telemetry import (STALE_BINS, PhaseTimer, build_report,
+                             open_trace, staleness_bin, update_msg_bytes)
 
 
 @jax.jit
@@ -81,7 +83,7 @@ class CohortEngine:
                  block: int = 64, dp_sigma: float = 0.0,
                  dp_clip: float = 0.0, dp_round_clip: float = 0.0,
                  use_dp_kernel: bool = True, interpret: bool = True,
-                 scenario=None):
+                 scenario=None, trace=None, dp_delta: float = 1e-5):
         self.ctask = ctask
         C = ctask.C
         self.C = C
@@ -140,6 +142,16 @@ class CohortEngine:
         self.total_messages = 0
         self.total_broadcasts = 0
         self._h_counts: Dict[int, int] = {}     # Algorithm 3's H, per round
+        # telemetry: same integer counters the device engine keeps
+        # in-loop — the parity contract pins them bitwise equal
+        self._upd_bytes = update_msg_bytes(ctask.D)
+        self.part = np.zeros(C, dtype=np.int64)
+        self.bytes_up = np.zeros(C, dtype=np.int64)
+        self.stale_hist = np.zeros(STALE_BINS, dtype=np.int64)
+        self.ovf_hwm = 0
+        self.far_messages = 0
+        self.dp_delta = float(dp_delta)
+        self._trace = open_trace(trace)
         self.history: List[Dict[str, float]] = []
 
     # -- host-side gathers --------------------------------------------------
@@ -188,8 +200,11 @@ class CohortEngine:
             st.v = _apply_contrib(st.v, far + near)
         elif far is not None or near is not None:
             st.v = _apply_contrib(st.v, far if far is not None else near)
-        for r, _c in pairs:
+        for r, _c, ks in pairs:
             self._h_counts[r] = self._h_counts.get(r, 0) + 1
+            # staleness-at-apply, binned against the PRE-cascade server_k
+            # (the device engine reads st.server_k at the same point)
+            self.stale_hist[staleness_bin(st.server_k - ks)] += 1
         while self._h_counts.get(st.server_k, 0) >= self.C:
             del self._h_counts[st.server_k]
             st.server_k += 1
@@ -240,6 +255,8 @@ class CohortEngine:
         st = self.state
         idx = np.flatnonzero(done)
         self.total_messages += len(idx)
+        self.part[idx] += 1
+        self.bytes_up[idx] += self._upd_bytes
         eta = self._eta_of(st.i)
         done_dev = jnp.asarray(done)
         wgt_all = jnp.asarray(eta * done, jnp.float32)
@@ -276,11 +293,17 @@ class CohortEngine:
             else:
                 vec = _weighted_sum(sent, jnp.asarray(eta * in_g,
                                                       jnp.float32))
+            far = ring is not None and int(g) - st.tick >= ring
+            members = np.flatnonzero(in_g)
+            if far:
+                self.far_messages += len(members)
             self.updates.add(int(g), vec,
-                             [(int(st.i[c]), int(c))
-                              for c in np.flatnonzero(in_g)],
-                             far=(ring is not None
-                                  and int(g) - st.tick >= ring))
+                             [(int(st.i[c]), int(c), int(st.k[c]))
+                              for c in members],
+                             far=far)
+        # far-tier occupancy high-water mark == the device engine's peak
+        # count of occupied overflow slots (one slot per pending far tick)
+        self.ovf_hwm = max(self.ovf_hwm, len(self.updates.far_contrib))
 
         st.i[done] += 1
         st.h[done] = 0
@@ -309,6 +332,9 @@ class CohortEngine:
                                           self.block, max_rounds,
                                           lat_tail_ticks=tail, duty=duty)
         next_eval = eval_every
+        timer = PhaseTimer()
+        import time
+        run_t0 = time.perf_counter()
         while st.server_k < max_rounds:
             if st.tick >= max_ticks:
                 raise RuntimeError(
@@ -323,9 +349,47 @@ class CohortEngine:
                          messages=self.total_messages)
                 self.history.append(m)
                 next_eval = st.server_k + eval_every
+                self._emit_segment()
         final = evals(st.v)
         final.update(round=st.server_k, time=st.tick * self.dt,
                      messages=self.total_messages,
-                     broadcasts=self.total_broadcasts)
+                     broadcasts=self.total_broadcasts,
+                     overflow_hwm=self.ovf_hwm,
+                     far_messages=self.far_messages)
+        timer.add("run", time.perf_counter() - run_t0)
+        report = self.telemetry_report(wall=timer.as_dict())
+        if self._trace:
+            self._trace.emit("report", **report.to_dict())
+            self._trace.close()
         return {"final": final, "history": self.history,
-                "model": self.ctask.unflatten(st.v)}
+                "model": self.ctask.unflatten(st.v), "telemetry": report}
+
+    # -- telemetry ----------------------------------------------------------
+    def _emit_segment(self) -> None:
+        if not self._trace:
+            return
+        st = self.state
+        self._trace.emit(
+            "segment", engine="host", round=int(st.server_k),
+            tick=int(st.tick), messages=self.total_messages,
+            broadcasts=self.total_broadcasts,
+            bytes_up_total=int(self.bytes_up.sum()),
+            staleness_hist=self.stale_hist,
+            overflow_hwm=self.ovf_hwm)
+
+    def telemetry_report(self, wall=None):
+        """MetricsReport from the counters accumulated so far."""
+        st = self.state
+        src_task = getattr(self.ctask, "task", None)
+        return build_report(
+            engine="host", clients=self.C, flat_dim=self.ctask.D,
+            rounds=int(st.server_k), messages=self.total_messages,
+            broadcasts=self.total_broadcasts,
+            participation=self.part, bytes_up=self.bytes_up,
+            staleness_hist=self.stale_hist,
+            overflow_hwm=self.ovf_hwm, far_messages=self.far_messages,
+            ticks=int(st.tick),
+            dp_sigma=self.dp_sigma, dp_delta=self.dp_delta,
+            n_examples=(int(src_task.X.shape[0])
+                        if hasattr(src_task, "X") else None),
+            sizes_per_client=self.sizes, wall=wall)

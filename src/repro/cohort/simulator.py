@@ -28,7 +28,7 @@ class CohortSimulator:
                  latency_fn: Optional[Callable] = None, seed: int = 0,
                  block: int = 64, dp_round_clip: float = 0.0,
                  use_dp_kernel: bool = True, interpret: bool = True,
-                 scenario=None):
+                 scenario=None, trace=None, dp_delta: float = 1e-5):
         self.task = task
         self.ctask = as_cohort_task(task, n_clients, seed=seed)
         # a pre-adapted cohort task keeps DP knobs on its wrapped task
@@ -41,7 +41,7 @@ class CohortSimulator:
             dp_clip=getattr(src_task, "dp_clip", 0.0),
             dp_round_clip=dp_round_clip,
             use_dp_kernel=use_dp_kernel, interpret=interpret,
-            scenario=scenario)
+            scenario=scenario, trace=trace, dp_delta=dp_delta)
 
     @property
     def server_model(self):
@@ -72,7 +72,8 @@ class DeviceCohortSimulator:
                  speeds: Optional[Sequence[float]] = None,
                  latency=None, seed: int = 0, block: int = 64,
                  dp_round_clip: float = 0.0, use_dp_kernel: bool = True,
-                 interpret: bool = True, scenario=None):
+                 interpret: bool = True, scenario=None, trace=None,
+                 dp_delta: float = 1e-5):
         self.task = task
         self.ctask = as_cohort_task(task, n_clients, seed=seed)
         src_task = getattr(task, "task", task)
@@ -84,7 +85,7 @@ class DeviceCohortSimulator:
             dp_clip=getattr(src_task, "dp_clip", 0.0),
             dp_round_clip=dp_round_clip,
             use_dp_kernel=use_dp_kernel, interpret=interpret,
-            scenario=scenario)
+            scenario=scenario, trace=trace, dp_delta=dp_delta)
 
     @property
     def server_model(self):

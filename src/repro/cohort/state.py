@@ -164,6 +164,19 @@ class DeviceCohortState(NamedTuple):
     err: Any               # []     i32 overflow-capacity error latch
     messages: Any          # []     i32 client->server updates sent
     broadcasts: Any        # []     i32 server broadcasts fired
+    # telemetry (repro.telemetry): census + staleness counters kept
+    # inside the jitted tick loop, synced to host only at eval segments.
+    # ``upd_ks[t % L, k % R]`` / ``ovf_ks[q, k % R]`` count arrivals by
+    # the SENDER's broadcast counter k at send time; staleness-at-apply
+    # is decoded at pop as (server_k - k) mod R, exact because the wait
+    # gate bounds it by d - 1 < R.
+    part: Any              # [C]    i32 updates sent per client
+    bytes_up: Any          # [C]    i32 uplink bytes per client
+    stale_hist: Any        # [S]    i32 staleness-at-apply histogram
+    upd_ks: Any            # [L, R] i32 arrival counts by sender k mod R
+    ovf_ks: Any            # [Q, R] i32 overflow counts by sender k mod R
+    ovf_hwm: Any           # []     i32 overflow occupancy high-water mark
+    far_msgs: Any          # []     i32 updates routed to the far tier
 
 
 @dataclass
@@ -181,10 +194,12 @@ class UpdateBuckets:
     """
     contrib: Dict[int, Any] = field(default_factory=dict)   # tick -> [D]
     far_contrib: Dict[int, Any] = field(default_factory=dict)
-    meta: Dict[int, List[Tuple[int, int]]] = field(default_factory=dict)
+    meta: Dict[int, List[Tuple[int, int, int]]] = field(default_factory=dict)
 
-    def add(self, tick: int, vec, pairs: List[Tuple[int, int]],
+    def add(self, tick: int, vec, pairs: List[Tuple[int, int, int]],
             far: bool = False) -> None:
+        """``pairs`` are (round, client, k_send) triples — round/client
+        feed Algorithm 3's H set, k_send the staleness-at-apply census."""
         bucket = self.far_contrib if far else self.contrib
         if tick in bucket:
             bucket[tick] = bucket[tick] + vec
@@ -194,7 +209,7 @@ class UpdateBuckets:
 
     def pop(self, tick: int):
         """-> ([D] far contribution or None, [D] near contribution or
-        None, [(round, client), ...])."""
+        None, [(round, client, k_send), ...])."""
         return (self.far_contrib.pop(tick, None),
                 self.contrib.pop(tick, None), self.meta.pop(tick, []))
 

@@ -31,6 +31,7 @@ class UpdateMsg:
     round_idx: int
     client_id: int
     U: Any                      # pytree: sum of (clipped, noised) gradients
+    k_send: int = 0             # sender's broadcast counter k at send time
 
 
 @dataclass
@@ -132,7 +133,8 @@ class Client:
         self.rng, sub = jax.random.split(self.rng)
         self.w, self.U = self.task.add_round_noise(
             self.w, self.U, eta=self.eta(self.i), rng=sub)
-        msg = UpdateMsg(round_idx=self.i, client_id=self.id, U=self.U)
+        msg = UpdateMsg(round_idx=self.i, client_id=self.id, U=self.U,
+                        k_send=self.k)
         self.sent_rounds.append(self.i)
         self.i += 1
         self.h = 0

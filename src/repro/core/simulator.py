@@ -31,6 +31,7 @@ from __future__ import annotations
 import heapq
 import itertools
 import math
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -39,6 +40,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.protocol import BroadcastMsg, Client, Server, UpdateMsg
+from repro.telemetry import (STALE_BINS, PhaseTimer, broadcast_msg_bytes,
+                             build_report, model_flat_dim, open_trace,
+                             staleness_bin, update_msg_bytes)
 
 
 @dataclass(order=True)
@@ -58,7 +62,7 @@ class AsyncFLSimulator:
                  = None,
                  seed: int = 0, record_invariant: bool = False,
                  global_sizes: Optional[Sequence[int]] = None,
-                 scenario=None):
+                 scenario=None, trace=None, dp_delta: float = 1e-5):
         self.task = task
         self.n = n_clients
         self.rng = np.random.default_rng(seed)
@@ -86,6 +90,7 @@ class AsyncFLSimulator:
             per_client = sizes_per_client
         else:
             per_client = [list(sizes_per_client)] * n_clients
+        self._sizes_sched = [list(s) for s in per_client]
         self.clients = [
             Client(c, w0, task, per_client[c], round_stepsizes, d,
                    seed=seed * 1000 + c)
@@ -97,6 +102,15 @@ class AsyncFLSimulator:
         self.last_advance = [0.0] * n_clients
         self.total_messages = 0
         self.total_broadcasts = 0
+        # telemetry: communication census + staleness-at-apply counters
+        self.flat_dim = model_flat_dim(w0)
+        self._upd_bytes = update_msg_bytes(self.flat_dim)
+        self._bc_bytes = broadcast_msg_bytes(self.flat_dim)
+        self.part = np.zeros(n_clients, dtype=np.int64)
+        self.bytes_up = np.zeros(n_clients, dtype=np.int64)
+        self.stale_hist = np.zeros(STALE_BINS, dtype=np.int64)
+        self.dp_delta = dp_delta
+        self._trace = open_trace(trace)
         self.history: List[Dict[str, float]] = []
         self.invariant_violations: List[Tuple[int, int, int]] = []
         for c in range(n_clients):
@@ -148,22 +162,41 @@ class AsyncFLSimulator:
             cl.run(rem)
         msg = cl.finish_round()
         self.total_messages += 1
+        self.part[c] += 1
+        self.bytes_up[c] += self._upd_bytes
         if self._plan is not None:
             # one batched draw per round, cached in the plan (the whole
             # fleet's round-i update latencies in a single device call)
             lat = self._plan.update_latencies_s(msg.round_idx)[c]
         else:
             lat = self.latency_fn(self.rng)
+        if self._trace:
+            self._trace.emit("update_sent", time=ev.time, client=c,
+                             round=msg.round_idx, k_send=msg.k_send,
+                             bytes=self._upd_bytes, latency_s=lat)
         self._push(ev.time + lat, "update_arrival", msg)
         self._schedule_round_complete(c)   # may be a no-op if now blocked
 
     def _on_update_arrival(self, ev: _Event) -> None:
-        for bcast in self.server.receive(ev.payload):
+        msg = ev.payload
+        # staleness-at-apply: completed server rounds since the sender's
+        # freshest-seen broadcast (bounded by d-1 via the wait gate)
+        tau = self.server.k - msg.k_send
+        self.stale_hist[staleness_bin(tau)] += 1
+        if self._trace:
+            self._trace.emit("update_applied", time=ev.time,
+                             client=msg.client_id, round=msg.round_idx,
+                             server_k=self.server.k, staleness=tau)
+        for bcast in self.server.receive(msg):
             self.total_broadcasts += 1
             if self._plan is not None:
                 lats = self._plan.broadcast_latencies_s(bcast.k)
             else:
                 lats = [self.latency_fn(self.rng) for _ in range(self.n)]
+            if self._trace:
+                self._trace.emit("broadcast_fired", time=ev.time, k=bcast.k,
+                                 bytes_per_client=self._bc_bytes,
+                                 clients=self.n)
             for c in range(self.n):
                 self._push(ev.time + lats[c], "broadcast_arrival", bcast, c)
 
@@ -172,6 +205,9 @@ class AsyncFLSimulator:
         cl = self.clients[c]
         was_blocked = cl.blocked
         self._advance_client(c, ev.time)
+        if self._trace:
+            self._trace.emit("broadcast_applied", time=ev.time, client=c,
+                             k=ev.payload.k, accepted=ev.payload.k > cl.k)
         cl.isr_receive(ev.payload)
         if was_blocked and not cl.blocked:
             self.last_advance[c] = ev.time
@@ -184,6 +220,8 @@ class AsyncFLSimulator:
         """Run until the server has completed ``max_rounds`` broadcasts."""
         evals = eval_fn or (lambda w: self.task.metrics(w))
         next_eval = eval_every
+        timer = PhaseTimer()
+        run_t0 = time.perf_counter()
         while self.events and self.server.k < max_rounds:
             ev = heapq.heappop(self.events)
             self.now = ev.time
@@ -203,8 +241,29 @@ class AsyncFLSimulator:
         final.update(round=self.server.k, time=self.now,
                      messages=self.total_messages,
                      broadcasts=self.total_broadcasts)
+        timer.add("run", time.perf_counter() - run_t0)
+        report = self.telemetry_report(wall=timer.as_dict())
+        if self._trace:
+            self._trace.emit("report", **report.to_dict())
+            self._trace.close()
         return {"final": final, "history": self.history,
-                "model": self.server.v}
+                "model": self.server.v, "telemetry": report}
+
+    def telemetry_report(self, wall=None):
+        """MetricsReport from the counters accumulated so far."""
+        src_task = self.task
+        return build_report(
+            engine="event", clients=self.n, flat_dim=self.flat_dim,
+            rounds=self.server.k, messages=self.total_messages,
+            broadcasts=self.total_broadcasts,
+            participation=self.part, bytes_up=self.bytes_up,
+            staleness_hist=self.stale_hist,
+            virtual_time=self.now,
+            dp_sigma=float(getattr(src_task, "dp_sigma", 0.0) or 0.0),
+            dp_delta=self.dp_delta,
+            n_examples=(int(src_task.X.shape[0])
+                        if hasattr(src_task, "X") else None),
+            sizes_per_client=self._sizes_sched, wall=wall)
 
 
 def run_sync_baseline(task, *, n_clients: int, n_rounds: int,

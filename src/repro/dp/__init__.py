@@ -1,6 +1,7 @@
 from repro.dp.accountant import (SelectedParameters, Theorem4Constants,
                                  delta_from_budget, moments_delta,
-                                 moments_epsilon, privacy_budget_B,
+                                 moments_epsilon, per_client_accounting,
+                                 privacy_budget_B,
                                  r0_sigma, r_from_r0, select_parameters,
                                  sigma_lower_bound_case1,
                                  sigma_lower_bound_case2, theorem4_simple_B)
@@ -9,7 +10,8 @@ from repro.dp.mechanism import (add_gaussian_noise, clip_accumulate,
 
 __all__ = [
     "SelectedParameters", "Theorem4Constants", "delta_from_budget",
-    "moments_delta", "moments_epsilon", "privacy_budget_B", "r0_sigma",
+    "moments_delta", "moments_epsilon", "per_client_accounting",
+    "privacy_budget_B", "r0_sigma",
     "r_from_r0", "select_parameters", "sigma_lower_bound_case1",
     "sigma_lower_bound_case2", "theorem4_simple_B",
     "add_gaussian_noise", "clip_accumulate", "clip_tree", "dp_sgd_round",

@@ -315,3 +315,50 @@ def moments_epsilon(sizes: Sequence[int], N_c: int, sigma: float,
         if hi - lo < tol:
             break
     return hi
+
+
+# ---------------------------------------------------------------------------
+# Per-client accounting (telemetry)
+# ---------------------------------------------------------------------------
+
+def per_client_accounting(sizes_rows: Sequence[Sequence[int]], N_c: int,
+                          sigma: float, delta: float, *,
+                          r0: Optional[float] = None
+                          ) -> List[dict]:
+    """Per-client (ε, σ, rounds-contributed) rows for a MetricsReport.
+
+    ``sizes_rows[c]`` is the sequence of sample sizes client c *actually
+    sent* (its participation record, not the planned schedule) — in the
+    paper's local-DP regime each client's privacy spend depends only on
+    its own mechanism invocations, so the moments accountant runs per
+    client over that row.  Identical rows share one bisection via a
+    cache, so fleets with a common schedule cost a single accountant
+    pass.  An infinite ε (σ too small for δ at this N_c) is reported as
+    ``None`` so the rows stay JSON-serializable.
+    """
+    cache: dict = {}
+    rows: List[dict] = []
+    for c, sizes in enumerate(sizes_rows):
+        key = tuple(int(s) for s in sizes)
+        if key not in cache:
+            if not key or sigma <= 0:
+                eps = 0.0 if not key else math.inf
+            else:
+                try:
+                    eps = moments_epsilon(list(key), N_c, sigma, delta,
+                                          r0=r0)
+                except ValueError:
+                    # sigma below Lemma 4's validity regime (u0/u1 >= 1):
+                    # no finite moments bound — report as unbounded
+                    eps = math.inf
+            cache[key] = eps
+        eps = cache[key]
+        rows.append({
+            "client": c,
+            "rounds_contributed": len(key),
+            "samples": int(sum(key)),
+            "sigma": float(sigma),
+            "delta": float(delta),
+            "epsilon": None if math.isinf(eps) else float(eps),
+        })
+    return rows

@@ -145,6 +145,12 @@ def cohort_pspecs(mesh: Mesh, n_clients: int) -> Dict[str, P]:
         "ovf_vec": P(None, None), "ovf_at": P(None),
         "ovf_cnt": P(None, None), "err": P(),
         "messages": P(), "broadcasts": P(),
+        # telemetry counters: per-client census shards with the client
+        # axis; the small histogram / ring-count arrays and scalar
+        # high-water marks replicate like the message rings they mirror
+        "part": P(c_ax), "bytes_up": P(c_ax),
+        "stale_hist": P(None), "upd_ks": P(None, None),
+        "ovf_ks": P(None, None), "ovf_hwm": P(), "far_msgs": P(),
     }
 
 

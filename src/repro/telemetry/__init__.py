@@ -1,0 +1,17 @@
+"""Telemetry: communication census, staleness/participation metrics,
+per-client DP accounting, JSONL traces, and phase profiling — one
+``MetricsReport`` schema shared by all three engines."""
+from repro.telemetry.report import (
+    HEADER_BYTES, STALE_BINS, MetricsReport, broadcast_msg_bytes,
+    build_report, model_flat_dim, participation_sizes, staleness_bin,
+    update_msg_bytes,
+)
+from repro.telemetry.trace import JsonlTraceWriter, open_trace
+from repro.telemetry.profiling import PhaseTimer
+
+__all__ = [
+    "HEADER_BYTES", "STALE_BINS", "MetricsReport", "broadcast_msg_bytes",
+    "build_report", "model_flat_dim", "participation_sizes",
+    "staleness_bin", "update_msg_bytes",
+    "JsonlTraceWriter", "open_trace", "PhaseTimer",
+]

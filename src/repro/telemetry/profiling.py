@@ -1,0 +1,36 @@
+"""Wall-clock phase profiling for engines and benchmarks.
+
+JAX engines spend their first call tracing + compiling; steady-state
+throughput claims are meaningless unless that phase is split out.
+``PhaseTimer`` accumulates named wall-clock phases (re-entering a phase
+adds to it) and serializes to a plain dict for MetricsReport.wall and
+BENCH_cohort.json.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Dict
+
+
+class PhaseTimer:
+    def __init__(self):
+        self.phases: Dict[str, float] = {}
+        self.counts: Dict[str, int] = {}
+
+    @contextmanager
+    def phase(self, name: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            dt = time.perf_counter() - t0
+            self.phases[name] = self.phases.get(name, 0.0) + dt
+            self.counts[name] = self.counts.get(name, 0) + 1
+
+    def add(self, name: str, seconds: float) -> None:
+        self.phases[name] = self.phases.get(name, 0.0) + float(seconds)
+        self.counts[name] = self.counts.get(name, 0) + 1
+
+    def as_dict(self, suffix: str = "_s") -> Dict[str, float]:
+        return {f"{k}{suffix}": v for k, v in self.phases.items()}

@@ -37,12 +37,21 @@ def _run_preset(name):
         round_stepsizes=[0.1, 0.08, 0.06], d=2, seed=2, block=4,
         scenario=name)
     res = sim.run(max_rounds=3, eval_every=1)
+    tel = res["telemetry"]
     return {
         "losses": [float(h["loss"]) for h in res["history"]],
         "final_loss": float(res["final"]["loss"]),
         "rounds": int(res["final"]["round"]),
         "messages": int(res["final"]["messages"]),
         "broadcasts": int(res["final"]["broadcasts"]),
+        # telemetry counter totals (repro.telemetry): integer-exact,
+        # pinned against silent census drift that parity tests (which
+        # compare engines to each other) cannot see
+        "participation": [int(x) for x in tel.participation],
+        "bytes_up_total": int(tel.bytes_up.sum()),
+        "staleness_hist": [int(x) for x in tel.staleness_hist],
+        "overflow_hwm": int(tel.overflow_hwm),
+        "far_messages": int(tel.far_messages),
     }
 
 
@@ -64,8 +73,10 @@ def test_golden_trajectory(name, regen_golden):
     assert os.path.exists(GOLDEN_PATH), (
         "no golden fixtures committed; run with --regen-golden")
     want = _load_golden()[name]
-    # protocol counts are integers: exact
-    for k in ("rounds", "messages", "broadcasts"):
+    # protocol and telemetry counts are integers: exact
+    for k in ("rounds", "messages", "broadcasts", "participation",
+              "bytes_up_total", "staleness_hist", "overflow_hwm",
+              "far_messages"):
         assert got[k] == want[k], (k, got[k], want[k])
     np.testing.assert_allclose(got["losses"], want["losses"],
                                rtol=RTOL, atol=ATOL)

@@ -1,0 +1,310 @@
+"""Telemetry subsystem: the cross-engine counter parity contract, DP
+accounting rows, JSONL traces, and profiling (repro.telemetry).
+
+The contract under test (ISSUE 6 acceptance): integer telemetry
+counters — per-client participation, bytes-on-wire, the
+staleness-at-apply histogram, and the overflow high-water mark — are
+bitwise identical between the host and device cohort engines, and
+exactly equal to the event simulator's ground truth at d = 1 under
+deterministic-compatible scenarios (at d > 1 the event sim applies
+updates message-by-message while the cohort engines merge each tick's
+arrivals before the cascade, so only the cohort pair is pinned there).
+"""
+import io
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.cohort import CohortSimulator, DeviceCohortSimulator
+from repro.core import AsyncFLSimulator, LogRegTask
+from repro.data import make_binary_dataset
+from repro.dp import moments_epsilon, per_client_accounting
+from repro.scenarios import LatencyTable, Scenario
+from repro.telemetry import (HEADER_BYTES, STALE_BINS, JsonlTraceWriter,
+                             MetricsReport, PhaseTimer, build_report,
+                             model_flat_dim, participation_sizes,
+                             staleness_bin, update_msg_bytes)
+
+
+def _task(n=300, d=12, seed=9, sample_seed=21, **kw):
+    X, y = make_binary_dataset(n, d, seed=seed, noise=0.3)
+    return LogRegTask(X, y, l2=1.0 / n, sample_seed=sample_seed, **kw)
+
+
+def _counters(report: MetricsReport):
+    return dict(messages=report.messages, broadcasts=report.broadcasts,
+                participation=list(report.participation),
+                bytes_up=list(report.bytes_up),
+                bytes_down=list(report.bytes_down),
+                staleness_hist=list(report.staleness_hist),
+                overflow_hwm=report.overflow_hwm,
+                far_messages=report.far_messages)
+
+
+# --- wire model -------------------------------------------------------------
+
+def test_wire_model_is_engine_invariant():
+    task = _task()
+    kw = dict(n_clients=4, sizes_per_client=[4, 6],
+              round_stepsizes=[0.1, 0.08], d=1, seed=0)
+    r_ev = AsyncFLSimulator(task, scenario="uniform", **kw).run(max_rounds=2)
+    r_dv = DeviceCohortSimulator(task, scenario="uniform", block=4,
+                                 **kw).run(max_rounds=2)
+    t_ev, t_dv = r_ev["telemetry"], r_dv["telemetry"]
+    # event sim counts pytree scalars, cohort engines use ctask.D == d+1
+    assert t_ev.flat_dim == t_dv.flat_dim == 13
+    assert t_ev.update_msg_bytes == update_msg_bytes(13) \
+        == HEADER_BYTES + 4 * 13
+    # per-message byte identity: bytes_up == participation * msg_bytes
+    for t in (t_ev, t_dv):
+        np.testing.assert_array_equal(
+            t.bytes_up, t.participation * t.update_msg_bytes)
+        np.testing.assert_array_equal(
+            t.bytes_down,
+            np.full(t.clients, t.broadcasts * t.broadcast_msg_bytes))
+
+
+# --- counter parity: event-sim ground truth at d = 1 ------------------------
+
+@pytest.mark.parametrize("preset", ["uniform", "mobile_diurnal"])
+def test_counters_match_event_ground_truth(preset):
+    """Staleness histogram + bytes-on-wire exactly equal the event sim's
+    on presets with a continuous-time form, at the d = 1 hard gate."""
+    task = _task()
+    kw = dict(n_clients=6, sizes_per_client=[4, 6, 8],
+              round_stepsizes=[0.1, 0.08, 0.06], d=1, seed=2)
+    r_ev = AsyncFLSimulator(task, scenario=preset, **kw).run(max_rounds=3)
+    r_co = CohortSimulator(task, scenario=preset, block=4,
+                           **kw).run(max_rounds=3)
+    r_dv = DeviceCohortSimulator(task, scenario=preset, block=4,
+                                 **kw).run(max_rounds=3)
+    want = _counters(r_ev["telemetry"])
+    assert _counters(r_co["telemetry"]) == want
+    assert _counters(r_dv["telemetry"]) == want
+    # d = 1 wait gate: every update applies at zero staleness
+    assert want["staleness_hist"][0] == want["messages"] != 0
+    assert sum(want["staleness_hist"][1:]) == 0
+
+
+def test_counters_bitwise_host_vs_device_geo_regional():
+    """Host-cohort vs device bitwise on geo_regional (epoch-hash churn —
+    no event-sim form) at d = 3 with DP: staleness spreads past bin 0
+    and the histograms still agree exactly."""
+    task = _task(dp_clip=1.0, dp_sigma=1.5)
+    kw = dict(n_clients=8, sizes_per_client=[4, 6, 8],
+              round_stepsizes=[0.1, 0.08, 0.06], d=3, seed=5,
+              block=4, scenario="geo_regional")
+    r_co = CohortSimulator(task, **kw).run(max_rounds=4)
+    r_dv = DeviceCohortSimulator(task, **kw).run(max_rounds=4)
+    co, dv = _counters(r_co["telemetry"]), _counters(r_dv["telemetry"])
+    assert co == dv
+    # the d = 3 gate admits staleness >= 1; this seed realizes it, so
+    # the test is sensitive to a broken histogram, not vacuous
+    assert sum(co["staleness_hist"][1:]) > 0
+    # trajectory parity still holds alongside the counters
+    assert r_co["final"]["loss"] == r_dv["final"]["loss"]
+
+
+def test_overflow_hwm_parity_and_run_results():
+    """Heavy-tail + small ring_cap routes updates through the far tier:
+    the overflow high-water mark and far-message census agree bitwise
+    host-vs-device and surface in run() results for ring_cap tuning."""
+    task = _task(dp_clip=0.1, dp_sigma=2.0)
+    scn = Scenario("tail", LatencyTable.from_uniform(1.0, 200.0, 16),
+                   ring_cap=8)
+    kw = dict(n_clients=6, sizes_per_client=[4, 6], d=2, seed=2,
+              round_stepsizes=[0.1, 0.08], block=4, dp_round_clip=0.5,
+              scenario=scn)
+    dv = DeviceCohortSimulator(task, **kw)
+    assert dv.engine.F > 0                     # far tier active
+    r_co = CohortSimulator(task, **kw).run(max_rounds=3)
+    r_dv = dv.run(max_rounds=3)
+    co, dvc = _counters(r_co["telemetry"]), _counters(r_dv["telemetry"])
+    assert co == dvc
+    assert dvc["far_messages"] > 0
+    assert dvc["overflow_hwm"] > 0
+    # surfaced in run() results (ROADMAP carry-over): hwm vs capacity
+    assert r_dv["final"]["overflow_hwm"] == dvc["overflow_hwm"]
+    assert r_dv["final"]["far_messages"] == dvc["far_messages"]
+    assert 0 < r_dv["final"]["overflow_hwm"] \
+        <= r_dv["final"]["overflow_slots"] == dv.engine.Q
+    assert r_co["final"]["overflow_hwm"] == dvc["overflow_hwm"]
+
+
+# --- staleness histogram semantics ------------------------------------------
+
+def test_staleness_bin_clamps_to_last():
+    assert staleness_bin(0) == 0
+    assert staleness_bin(STALE_BINS - 2) == STALE_BINS - 2
+    assert staleness_bin(STALE_BINS - 1) == STALE_BINS - 1
+    assert staleness_bin(STALE_BINS + 40) == STALE_BINS - 1
+
+
+def test_staleness_bounded_by_gate():
+    """The wait gate bounds staleness-at-apply by d - 1 on every engine."""
+    task = _task()
+    d = 3
+    kw = dict(n_clients=4, sizes_per_client=[2, 3],
+              round_stepsizes=[0.1, 0.08], d=d, seed=1, block=4,
+              scenario="uniform")
+    r = DeviceCohortSimulator(task, **kw).run(max_rounds=4)
+    hist = r["telemetry"].staleness_hist
+    assert hist[:d].sum() == hist.sum() != 0
+
+
+# --- DP accounting ----------------------------------------------------------
+
+def test_per_client_accounting_rows():
+    rows = per_client_accounting([[4, 6, 8], [4, 6], [], [4, 6, 8]],
+                                 N_c=300, sigma=2.0, delta=1e-5)
+    assert [r["client"] for r in rows] == [0, 1, 2, 3]
+    assert [r["rounds_contributed"] for r in rows] == [3, 2, 0, 3]
+    assert rows[2]["epsilon"] == 0.0           # never participated
+    # identical schedules share one bisection -> identical epsilon
+    assert rows[0]["epsilon"] == rows[3]["epsilon"]
+    # fewer rounds cannot cost more privacy
+    assert rows[1]["epsilon"] <= rows[0]["epsilon"]
+    # rows agree with a direct accountant call
+    want = moments_epsilon([4, 6, 8], 300, 2.0, 1e-5)
+    assert rows[0]["epsilon"] == pytest.approx(want)
+
+
+def test_per_client_accounting_inf_is_none():
+    rows = per_client_accounting([[64]], N_c=100, sigma=0.3, delta=1e-9)
+    assert rows[0]["epsilon"] is None          # below Lemma 4's regime
+
+
+def test_participation_sizes_prefix_rule():
+    rows = participation_sizes([[4, 6, 8], [5]], [5, 2])
+    assert rows[0] == [4, 6, 8, 8, 8]          # last size repeats
+    assert rows[1] == [5, 5]
+
+
+def test_dp_rows_in_engine_reports():
+    task = _task(dp_clip=1.0, dp_sigma=2.0)
+    kw = dict(n_clients=4, sizes_per_client=[4, 6],
+              round_stepsizes=[0.1, 0.08], d=1, seed=0, block=4,
+              scenario="uniform")
+    r_co = CohortSimulator(task, **kw).run(max_rounds=2)
+    r_dv = DeviceCohortSimulator(task, **kw).run(max_rounds=2)
+    for r in (r_co, r_dv):
+        t = r["telemetry"]
+        assert t.dp is not None and len(t.dp) == 4
+        for row, did in zip(t.dp, t.participation):
+            assert row["rounds_contributed"] == int(did)
+            assert row["sigma"] == 2.0
+            assert row["epsilon"] is not None and row["epsilon"] > 0
+    # same participation => same accounting on both engines
+    assert r_co["telemetry"].dp == r_dv["telemetry"].dp
+    # no-DP runs carry no accounting rows
+    r_plain = DeviceCohortSimulator(_task(), **kw).run(max_rounds=2)
+    assert r_plain["telemetry"].dp is None
+
+
+# --- JSONL traces -----------------------------------------------------------
+
+def test_event_trace_jsonl_roundtrip():
+    task = _task()
+    buf = io.StringIO()
+    kw = dict(n_clients=4, sizes_per_client=[4, 6],
+              round_stepsizes=[0.1, 0.08], d=1, seed=0)
+    res = AsyncFLSimulator(task, scenario="uniform", trace=buf,
+                           **kw).run(max_rounds=2)
+    recs = [json.loads(line) for line in
+            buf.getvalue().strip().splitlines()]
+    kinds = {r["kind"] for r in recs}
+    assert {"update_sent", "update_applied", "broadcast_fired",
+            "broadcast_applied", "report"} <= kinds
+    t = res["telemetry"]
+    sent = [r for r in recs if r["kind"] == "update_sent"]
+    assert len(sent) == t.messages
+    assert all(r["bytes"] == t.update_msg_bytes for r in sent)
+    applied = [r for r in recs if r["kind"] == "update_applied"]
+    # trace staleness values reproduce the histogram
+    hist = np.zeros(STALE_BINS, dtype=np.int64)
+    for r in applied:
+        hist[staleness_bin(r["staleness"])] += 1
+    np.testing.assert_array_equal(hist, t.staleness_hist)
+    fired = [r for r in recs if r["kind"] == "broadcast_fired"]
+    assert len(fired) == t.broadcasts
+    # the final record is the full report
+    rep = [r for r in recs if r["kind"] == "report"]
+    assert len(rep) == 1 and rep[0]["messages"] == t.messages
+
+
+@pytest.mark.parametrize("engine", ["cohort", "device"])
+def test_cohort_segment_trace(engine, tmp_path):
+    task = _task()
+    path = tmp_path / f"{engine}.jsonl"
+    cls = CohortSimulator if engine == "cohort" else DeviceCohortSimulator
+    res = cls(task, n_clients=4, sizes_per_client=[4, 6],
+              round_stepsizes=[0.1, 0.08], d=1, seed=0, block=4,
+              scenario="uniform", trace=str(path)).run(max_rounds=3,
+                                                       eval_every=1)
+    recs = [json.loads(line) for line in
+            path.read_text().strip().splitlines()]
+    segs = [r for r in recs if r["kind"] == "segment"]
+    assert len(segs) == len(res["history"])
+    assert [s["round"] for s in segs] == \
+        [h["round"] for h in res["history"]]
+    for s in segs:
+        assert s["messages"] >= 0 and len(s["staleness_hist"]) == STALE_BINS
+    rep = [r for r in recs if r["kind"] == "report"]
+    assert len(rep) == 1
+    assert rep[0]["messages"] == res["telemetry"].messages
+    assert rep[0]["participation"] == \
+        [int(x) for x in res["telemetry"].participation]
+
+
+# --- report schema / serialization ------------------------------------------
+
+def test_report_to_json_roundtrip():
+    rep = build_report(
+        engine="host", clients=3, flat_dim=10, rounds=2, messages=6,
+        broadcasts=2, participation=np.array([2, 2, 2]),
+        bytes_up=np.array([112, 112, 112]),
+        staleness_hist=np.zeros(STALE_BINS, np.int64),
+        wall={"run": 0.5})
+    d = json.loads(rep.to_json())
+    assert d["engine"] == "host" and d["clients"] == 3
+    assert d["bytes_down"] == [2 * rep.broadcast_msg_bytes] * 3
+    assert isinstance(rep.summary(), str) and "rounds=2" in rep.summary()
+
+
+def test_model_flat_dim_counts_pytree_scalars():
+    assert model_flat_dim({"w": np.zeros((3, 4)), "b": np.zeros(())}) == 13
+
+
+def test_phase_timer_accumulates():
+    t = PhaseTimer()
+    with t.phase("a"):
+        pass
+    with t.phase("a"):
+        pass
+    with t.phase("b"):
+        pass
+    assert t.counts["a"] == 2 and t.counts["b"] == 1
+    d = t.as_dict()
+    assert set(d) == {"a_s", "b_s"} and all(v >= 0 for v in d.values())
+
+
+def test_engine_reports_carry_wall_phases():
+    task = _task()
+    kw = dict(n_clients=4, sizes_per_client=[4, 6],
+              round_stepsizes=[0.1, 0.08], d=1, seed=0)
+    r_dv = DeviceCohortSimulator(task, block=4, scenario="uniform",
+                                 **kw).run(max_rounds=2)
+    assert "first_segment_s" in r_dv["telemetry"].wall
+    r_ev = AsyncFLSimulator(task, scenario="uniform", **kw).run(max_rounds=2)
+    assert r_ev["telemetry"].wall["run_s"] > 0
+
+
+def test_trace_writer_coerces_numpy():
+    buf = io.StringIO()
+    w = JsonlTraceWriter(buf)
+    w.emit("x", a=np.int64(3), b=np.arange(2), c=np.float32(0.5))
+    w.close()
+    assert json.loads(buf.getvalue()) == \
+        {"kind": "x", "a": 3, "b": [0, 1], "c": 0.5}
