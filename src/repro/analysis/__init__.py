@@ -1,0 +1,27 @@
+"""Parity sanitizer: repo-specific static analysis + trace invariants.
+
+Rule families (see ``python -m repro.analysis --help``):
+  PRNG-*    — PRNG address-space audit against the central salt
+              registry (``repro.analysis.salts``)
+  PURITY-*  — host-world constructs inside traced (jitted) functions
+  STRUCT-*  — DeviceCohortState / sharding-spec completeness + dtype
+              discipline
+  INV-*     — protocol invariants model-checked over JSONL telemetry
+              traces (``repro.analysis.invariants``)
+
+Only the salt registry is imported eagerly: the engines import their
+salts from here at module-import time, so ``repro.analysis`` must not
+pull in the engine packages (keep this __init__ free of runner/
+structure imports).
+"""
+from repro.analysis.base import Violation
+from repro.analysis.salts import (AVAIL_SALT, LAT_SALT, NOISE_SALT,
+                                  PHASE_SALT, REGION_SALT, RENEW_SALT,
+                                  SPEED_SALT, TABLE_SALT, REGISTRY, Salt,
+                                  salt_names)
+
+__all__ = [
+    "Violation", "Salt", "REGISTRY", "salt_names",
+    "LAT_SALT", "TABLE_SALT", "AVAIL_SALT", "PHASE_SALT", "REGION_SALT",
+    "RENEW_SALT", "SPEED_SALT", "NOISE_SALT",
+]

@@ -1,0 +1,7 @@
+"""CLI entry point: ``python -m repro.analysis src/repro``."""
+import sys
+
+from repro.analysis.runner import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,368 @@
+"""Traced-code purity lint (rule family PURITY-*).
+
+JAX traces Python once and replays compiled XLA; anything host-side that
+sneaks into a traced function either crashes at trace time, silently
+bakes a constant into the executable, or forces a hidden device→host
+sync.  This pass statically identifies the repo's TRACED functions and
+flags host-world constructs inside them:
+
+  PURITY-NPRANDOM   ``np.random.*`` calls (untraced host randomness —
+                    bakes one draw into the compiled code)
+  PURITY-CLOCK      ``time.time`` / ``perf_counter`` / ``datetime.now``
+  PURITY-ITEM       ``.item()`` (device→host sync inside the trace)
+  PURITY-COERCE     ``float(x)`` / ``int(x)`` / ``bool(x)`` on a
+                    non-constant (host coercion of a traced value)
+  PURITY-BRANCH     Python ``if`` / ``while`` / ``for`` / ``assert``
+                    whose condition derives from a traced argument
+                    (use ``lax.cond`` / ``jnp.where``; branching on
+                    closure constants is fine)
+
+Traced functions are found structurally, not by module reachability —
+the engine modules legitimately mix host-side setup (numpy seeds at
+construction) with traced closures, so the unit of analysis is the
+function:
+
+  * decorated with ``@jax.jit`` / ``@jit`` / ``@partial(jax.jit, ...)``,
+  * passed (by name or as a lambda) to a tracing consumer —
+    ``jax.jit``, ``vmap``, ``grad``, ``lax.while_loop`` / ``cond`` /
+    ``scan`` / ``fori_loop`` / ``switch`` / ``map``, ``pallas_call``,
+  * nested inside a known traced-closure factory (``TRACED_MAKERS``:
+    the repo convention that everything defined inside ``tick_plan`` /
+    ``block_body`` / ``_build_segment`` runs under the jitted tick
+    loops),
+  * or nested inside / called by name from any of the above
+    (same-module transitive closure).
+
+Taint for PURITY-BRANCH is a single forward pass: the traced function's
+parameters are tainted, and a name assigned from an expression that
+mentions a tainted name becomes tainted.  Closure constants (ring sizes,
+dp flags) never taint, so the engines' ``if F > 0:`` staging branches
+pass — exactly the static/traced split the device engine is built on.
+
+Deliberate taint exceptions (each is static at trace time):
+
+  * params listed in the jit decorator's ``static_argnames``,
+  * config-object params (``cfg`` / ``config`` / ``hparams`` — plain
+    dataclasses, never arrays),
+  * array *metadata* attributes (``.shape`` / ``.ndim`` / ``.dtype`` /
+    ``.size``) and everything derived from them (padding amounts),
+  * ``is (not) None`` identity tests and ``in`` dict-membership tests
+    on parameter pytrees.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Union
+
+from repro.analysis.base import Violation
+
+#: functions whose nested defs are traced by repo convention: closures
+#: they build are installed inside the jitted tick loops / run_block
+TRACED_MAKERS = {"tick_plan", "block_body", "_build_segment"}
+
+#: callables whose function-valued arguments get traced
+TRACING_CONSUMERS = {"jit", "vmap", "pmap", "grad", "value_and_grad",
+                     "while_loop", "cond", "scan", "fori_loop", "switch",
+                     "map", "pallas_call", "checkpoint", "remat",
+                     "custom_vjp", "custom_jvp"}
+
+CLOCK_CALLS = {"time", "perf_counter", "monotonic", "process_time",
+               "now", "clock_gettime"}
+
+#: attribute accesses that yield static trace-time metadata, not traced
+#: values — shape-derived padding arithmetic stays untainted
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "sharding",
+                "weak_type"}
+
+#: parameter names that are config dataclasses by repo convention —
+#: branching on their fields is the static model-family dispatch
+CONFIG_PARAMS = {"cfg", "config", "hparams"}
+
+FuncNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+
+def _attr_last(node: ast.expr) -> Optional[str]:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _attr_chain(node: ast.expr) -> List[str]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return parts[::-1]
+
+
+def _is_jit_decorator(dec: ast.expr) -> bool:
+    if _attr_last(dec) == "jit":
+        return True
+    if isinstance(dec, ast.Call):
+        fn = _attr_last(dec.func)
+        if fn == "jit":
+            return True
+        if fn == "partial" and dec.args \
+                and _attr_last(dec.args[0]) == "jit":
+            return True
+    return False
+
+
+class _FuncIndex(ast.NodeVisitor):
+    """Collect every function def with its parent chain."""
+
+    def __init__(self):
+        self.funcs: List[FuncNode] = []
+        self.parent: Dict[FuncNode, Optional[FuncNode]] = {}
+        self.by_name: Dict[str, List[FuncNode]] = {}
+        self._stack: List[FuncNode] = []
+
+    def _enter(self, node: FuncNode) -> None:
+        self.funcs.append(node)
+        self.parent[node] = self._stack[-1] if self._stack else None
+        name = getattr(node, "name", None)
+        if name:
+            self.by_name.setdefault(name, []).append(node)
+        self._stack.append(node)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    visit_FunctionDef = _enter
+    visit_AsyncFunctionDef = _enter
+    visit_Lambda = _enter
+
+
+def _traced_roots(tree: ast.Module, index: _FuncIndex) -> Set[FuncNode]:
+    roots: Set[FuncNode] = set()
+    # decorator-based
+    for fn in index.funcs:
+        for dec in getattr(fn, "decorator_list", []):
+            if _is_jit_decorator(dec):
+                roots.add(fn)
+        # nested inside a traced-closure factory
+        p = index.parent[fn]
+        while p is not None:
+            if getattr(p, "name", None) in TRACED_MAKERS:
+                roots.add(fn)
+                break
+            p = index.parent[p]
+    # consumer-call based: jax.jit(f), lax.cond(p, f, g, ...), vmap(f)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _attr_last(node.func) not in TRACING_CONSUMERS:
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Lambda):
+                roots.add(arg)
+            elif isinstance(arg, ast.Name):
+                roots.update(index.by_name.get(arg.id, []))
+    return roots
+
+
+def _transitive(roots: Set[FuncNode], index: _FuncIndex) -> Set[FuncNode]:
+    """Roots + functions they call by bare name + their nested defs."""
+    traced = set(roots)
+    frontier = list(roots)
+    while frontier:
+        fn = frontier.pop()
+        for node in ast.walk(fn):
+            callee = None
+            if isinstance(node, ast.Call) and isinstance(node.func,
+                                                         ast.Name):
+                callee = node.func.id
+            if callee:
+                for cand in index.by_name.get(callee, []):
+                    if cand not in traced:
+                        traced.add(cand)
+                        frontier.append(cand)
+            if node is not fn and isinstance(
+                    node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if node not in traced:
+                    traced.add(node)
+                    frontier.append(node)
+    return traced
+
+
+def _params(fn: FuncNode) -> Set[str]:
+    a = fn.args
+    names = [p.arg for p in
+             list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return {n for n in names if n != "self" and n not in CONFIG_PARAMS}
+
+
+def _static_argnames(fn: FuncNode) -> Set[str]:
+    """Param names the jit decorator marks static (trace-time Python)."""
+    names: Set[str] = set()
+    for dec in getattr(fn, "decorator_list", []):
+        if not isinstance(dec, ast.Call):
+            continue
+        f = _attr_last(dec.func)
+        if f == "partial" and not (dec.args
+                                   and _attr_last(dec.args[0]) == "jit"):
+            continue
+        if f not in ("jit", "partial"):
+            continue
+        for kw in dec.keywords:
+            if kw.arg == "static_argnames":
+                for c in ast.walk(kw.value):
+                    if isinstance(c, ast.Constant) \
+                            and isinstance(c.value, str):
+                        names.add(c.value)
+    return names
+
+
+def _names_in(expr: ast.expr) -> Set[str]:
+    """Names that carry taint — skips static-metadata attribute reads
+    (``x.shape`` mentions ``x`` but yields trace-time Python)."""
+    out: Set[str] = set()
+
+    def walk(node: ast.AST) -> None:
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return
+            walk(node.value)
+            return
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+            return
+        for c in ast.iter_child_nodes(node):
+            walk(c)
+
+    walk(expr)
+    return out
+
+
+def _test_is_static(expr: ast.expr) -> bool:
+    """True when a branch test is decidable at trace time regardless of
+    taint: ``is (not) None`` identity and ``in`` dict-membership checks
+    (the repo's optional-arg and params-pytree idioms)."""
+    if isinstance(expr, ast.BoolOp):
+        return all(_test_is_static(v) for v in expr.values)
+    if isinstance(expr, ast.UnaryOp) and isinstance(expr.op, ast.Not):
+        return _test_is_static(expr.operand)
+    if isinstance(expr, ast.Compare):
+        return all(isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn))
+                   for op in expr.ops)
+    return False
+
+
+def _check_traced_fn(fn: FuncNode, path: str,
+                     traced: Set[FuncNode]) -> List[Violation]:
+    out: List[Violation] = []
+    label = getattr(fn, "name", "<lambda>")
+    tainted = _params(fn) - _static_argnames(fn)
+
+    def is_tainted(expr: ast.expr) -> bool:
+        return bool(_names_in(expr) & tainted)
+
+    def test_tainted(expr: ast.expr) -> bool:
+        return not _test_is_static(expr) and is_tainted(expr)
+
+    body = fn.body if isinstance(fn.body, list) else [ast.Expr(fn.body)]
+    stmts: List[ast.stmt] = list(body)
+    while stmts:
+        st = stmts.pop(0)
+        # don't descend into nested defs: they are traced functions of
+        # their own (handled separately) with their own parameter taint
+        children = [c for c in ast.iter_child_nodes(st)
+                    if not isinstance(c, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef,
+                                          ast.Lambda))]
+        for node in children:
+            if isinstance(node, ast.stmt):
+                stmts.append(node)
+        # taint propagation
+        if isinstance(st, ast.Assign) and is_tainted(st.value):
+            for t in st.targets:
+                tainted.update(_names_in(t))
+        if isinstance(st, (ast.AugAssign, ast.AnnAssign)) \
+                and st.value is not None and is_tainted(st.value):
+            tainted.update(_names_in(st.target))
+        # host-branching on traced values
+        if isinstance(st, (ast.If, ast.While)) and test_tainted(st.test):
+            out.append(Violation(
+                "PURITY-BRANCH", path, st.lineno,
+                f"Python {type(st).__name__.lower()} on traced value in "
+                f"{label}() — use lax.cond/jnp.where"))
+        if isinstance(st, ast.Assert) and test_tainted(st.test):
+            out.append(Violation(
+                "PURITY-BRANCH", path, st.lineno,
+                f"assert on traced value in {label}()"))
+        if isinstance(st, ast.For) and is_tainted(st.iter):
+            out.append(Violation(
+                "PURITY-BRANCH", path, st.lineno,
+                f"Python for over traced value in {label}() — use "
+                f"lax.scan/fori_loop"))
+        # expression-level checks within this statement
+        for node in ast.walk(st):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                continue
+            if isinstance(node, ast.IfExp) and test_tainted(node.test):
+                out.append(Violation(
+                    "PURITY-BRANCH", path, node.lineno,
+                    f"ternary on traced value in {label}() — use "
+                    f"jnp.where"))
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            if len(chain) >= 2 and chain[-2] == "random" \
+                    and chain[0] in ("np", "numpy"):
+                out.append(Violation(
+                    "PURITY-NPRANDOM", path, node.lineno,
+                    f"np.random.{chain[-1]} in traced {label}() — use "
+                    f"jax.random on an addressed key"))
+            elif len(chain) >= 2 and chain[0] in ("time", "datetime") \
+                    and chain[-1] in CLOCK_CALLS:
+                out.append(Violation(
+                    "PURITY-CLOCK", path, node.lineno,
+                    f"{'.'.join(chain)} in traced {label}() — wall "
+                    f"clock cannot cross into compiled code"))
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" and not node.args:
+                out.append(Violation(
+                    "PURITY-ITEM", path, node.lineno,
+                    f".item() in traced {label}() — host sync inside "
+                    f"the trace"))
+            elif isinstance(node.func, ast.Name) \
+                    and node.func.id in ("float", "int", "bool") \
+                    and node.args \
+                    and not isinstance(node.args[0], ast.Constant) \
+                    and is_tainted(node.args[0]):
+                out.append(Violation(
+                    "PURITY-COERCE", path, node.lineno,
+                    f"{node.func.id}() on traced value in {label}() — "
+                    f"host coercion forces a sync"))
+    return out
+
+
+def check_file(path: str, source: Optional[str] = None) -> List[Violation]:
+    src = source if source is not None else open(path).read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Violation("PURITY-PARSE", path, e.lineno or 0,
+                          f"cannot parse: {e.msg}")]
+    index = _FuncIndex()
+    index.visit(tree)
+    traced = _transitive(_traced_roots(tree, index), index)
+    out: List[Violation] = []
+    for fn in sorted(traced, key=lambda f: f.lineno):
+        out.extend(_check_traced_fn(fn, path, traced))
+    return out
+
+
+def check_files(paths: Sequence[str]) -> List[Violation]:
+    out: List[Violation] = []
+    for p in paths:
+        out.extend(check_file(p))
+    return out

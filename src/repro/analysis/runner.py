@@ -1,0 +1,96 @@
+"""Orchestration for ``python -m repro.analysis``: run every rule family
+over a set of paths, apply the (normally empty) baseline, and report.
+
+Rule families:
+  * PRNG-*    salt-registry audit of PRNG key creations (AST)
+  * PURITY-*  host-world constructs inside traced functions (AST)
+  * STRUCT-*  DeviceCohortState vs sharding-spec completeness + dtype
+              discipline (introspection; needs the repro package
+              importable — skipped with ``structure=False``)
+  * INV-*     protocol invariants over a JSONL telemetry trace
+              (only when ``trace=`` is given)
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+from repro.analysis.base import (Violation, apply_baseline, iter_py_files,
+                                 load_baseline)
+
+
+def run_analysis(paths: Sequence[str], *,
+                 baseline: Optional[str] = None,
+                 structure: bool = True,
+                 trace: Optional[str] = None,
+                 trace_d: Optional[int] = None,
+                 ) -> Tuple[List[Violation], List[Violation]]:
+    """-> (all violations, violations remaining after the baseline)."""
+    from repro.analysis import invariants, prng, purity, salts, structure \
+        as structure_mod
+
+    files = iter_py_files(paths) if paths else []
+    violations: List[Violation] = []
+    violations.extend(salts.check_registry())
+    violations.extend(prng.check_files(files))
+    violations.extend(purity.check_files(files))
+    if structure:
+        violations.extend(structure_mod.check_cohort_structure())
+    if trace is not None:
+        violations.extend(invariants.check_trace(trace, d=trace_d))
+    violations.sort(key=lambda v: (v.path, v.line, v.rule))
+    keys = load_baseline(baseline) if baseline else []
+    return violations, apply_baseline(violations, keys)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Parity sanitizer: PRNG salt audit, sharding "
+                    "completeness, traced-code purity, and protocol "
+                    "trace invariants.")
+    ap.add_argument("paths", nargs="*",
+                    help=".py files or directories to lint "
+                         "(e.g. src/repro)")
+    ap.add_argument("--baseline", default=None,
+                    help="file of Violation keys to tolerate "
+                         "(CI ships an empty one)")
+    ap.add_argument("--no-structure", action="store_true",
+                    help="skip the DeviceCohortState/sharding "
+                         "introspection checks")
+    ap.add_argument("--trace", default=None,
+                    help="also model-check a JSONL telemetry trace")
+    ap.add_argument("--d", type=int, default=None, dest="trace_d",
+                    help="the run's broadcast-lag gate d, enabling the "
+                         "τ ≤ d-1 trace checks")
+    ap.add_argument("--list-salts", action="store_true",
+                    help="print the salt registry and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_salts:
+        from repro.analysis.salts import REGISTRY
+        for s in sorted(REGISTRY.values(), key=lambda s: s.value):
+            print(f"{s.value:#10x}  {s.name:<12} {s.chain}")
+            for site in s.sites:
+                print(f"{'':12}  {'':<12} site: {site}")
+        return 0
+
+    if not args.paths and args.trace is None:
+        ap.error("give at least one path to lint (or --trace/"
+                 "--list-salts)")
+
+    all_v, new_v = run_analysis(
+        args.paths, baseline=args.baseline,
+        structure=not args.no_structure,
+        trace=args.trace, trace_d=args.trace_d)
+    for v in new_v:
+        print(v.format())
+    suppressed = len(all_v) - len(new_v)
+    if suppressed:
+        print(f"({suppressed} baselined finding(s) suppressed)")
+    if new_v:
+        print(f"FAILED: {len(new_v)} finding(s)")
+        return 1
+    print(f"OK: {len(iter_py_files(args.paths)) if args.paths else 0} "
+          f"file(s) clean")
+    return 0

@@ -1,0 +1,121 @@
+"""Central PRNG salt registry — the single source of truth for every
+``PRNGKey(seed ^ SALT)`` / ``default_rng(seed ^ SALT)`` root in the repo.
+
+The parity contract (host-cohort vs device bitwise under stochastic
+latency, churn, and DP) rests on message-addressed threefry chains that
+must never collide: two semantically distinct chains keyed off the same
+``seed ^ salt`` root would draw correlated randomness, and the bug would
+surface only as a statistically-odd trajectory, not as a test failure.
+Every salt therefore lives HERE, with its chain semantics and the
+modules allowed to key-create with it; ``repro.analysis.prng`` fails the
+lint on any XOR-salted key creation that does not import its salt from
+this registry, and on any numeric collision between registered salts.
+
+Declaring a salt:
+
+    MY_SALT = _declare("MY_SALT", 0x..., chain="what the chain draws",
+                       sites=("repro.my.module",))
+
+and import it at the use site (``from repro.analysis.salts import
+MY_SALT``).  ``sites`` lists the modules that may create keys with it —
+one semantic chain may legitimately have two roots (the DP-noise chain
+is keyed identically by both cohort engines BECAUSE parity requires the
+same noise), but a salt showing up in an undeclared module is exactly
+the "one salt, two meanings" drift the auditor exists to stop.
+
+This module is imported by ``repro.scenarios`` / ``repro.cohort`` at
+engine-import time, so it must stay dependency-free (stdlib only).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+
+@dataclass(frozen=True)
+class Salt:
+    name: str
+    value: int
+    chain: str                 # what the derived key chain draws
+    sites: Tuple[str, ...]     # modules allowed to key-create with it
+
+
+REGISTRY: Dict[str, Salt] = {}
+
+
+def _declare(name: str, value: int, *, chain: str,
+             sites: Tuple[str, ...]) -> int:
+    if name in REGISTRY:
+        raise ValueError(f"salt {name} declared twice")
+    REGISTRY[name] = Salt(name, int(value), chain, tuple(sites))
+    return int(value)
+
+
+# -- scenario chains (repro.scenarios) --------------------------------------
+LAT_SALT = _declare(
+    "LAT_SALT", 0x1A7E9C,
+    chain="message-addressed latency draws: update by (client, round), "
+          "broadcast by (k, client) on fold_in branches 0/1",
+    sites=("repro.scenarios.registry",))
+TABLE_SALT = _declare(
+    "TABLE_SALT", 0x7AB1E,
+    chain="numpy stream for drawn per-client latency-table assignments "
+          "(TableAssignment kind='draw')",
+    sites=("repro.scenarios.registry",))
+AVAIL_SALT = _declare(
+    "AVAIL_SALT", 0xA7A1B,
+    chain="availability churn: per-(epoch, client) uniforms for Churn "
+          "and the client factor of RegionalChurn",
+    sites=("repro.scenarios.availability",))
+PHASE_SALT = _declare(
+    "PHASE_SALT", 0xD1A7,
+    chain="numpy stream for diurnal per-client phase draws",
+    sites=("repro.scenarios.availability",))
+REGION_SALT = _declare(
+    "REGION_SALT", 0x2E610,
+    chain="regional-churn shared factor: per-(epoch, region) up-draws",
+    sites=("repro.scenarios.availability",))
+RENEW_SALT = _declare(
+    "RENEW_SALT", 0x9E4A1,
+    chain="renewal churn: per-(epoch, client) holding-time draws (cohort "
+          "tick approximation) and the event sim's per-client numpy "
+          "renewal streams",
+    sites=("repro.scenarios.availability",))
+SPEED_SALT = _declare(
+    "SPEED_SALT", 0x5BEED,
+    chain="numpy stream for the per-client fleet speed draw "
+          "(SpeedModel.draw)",
+    sites=("repro.scenarios.availability",))
+
+# -- DP chain (repro.cohort) -------------------------------------------------
+# ONE chain, keyed from two modules by design: the host and device
+# engines must fold the SAME per-tick noise keys or host-vs-device DP
+# parity breaks (tests/test_scenarios.py pins it bitwise).
+NOISE_SALT = _declare(
+    "NOISE_SALT", 0x5EED,
+    chain="round-completion DP noise: fold_in(PRNGKey(seed ^ NOISE_SALT), "
+          "tick), shared verbatim by both cohort engines (parity)",
+    sites=("repro.cohort.engine", "repro.cohort.device"))
+
+
+def salt_names() -> List[str]:
+    return sorted(REGISTRY)
+
+
+def check_registry() -> List["Violation"]:  # noqa: F821 (doc type)
+    """Registry self-audit: numeric collisions between declared salts.
+
+    (Exact collisions only: distinct salts land in distinct threefry
+    key spaces even at hamming distance 1, so near-misses are fine.)
+    """
+    from repro.analysis.base import Violation
+    out: List[Violation] = []
+    by_value: Dict[int, List[str]] = {}
+    for s in REGISTRY.values():
+        by_value.setdefault(s.value, []).append(s.name)
+    for value, names in sorted(by_value.items()):
+        if len(names) > 1:
+            out.append(Violation(
+                "PRNG-COLLISION", "<registry>", 0,
+                f"salts {sorted(names)} share value {value:#x}"))
+    return out

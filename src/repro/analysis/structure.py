@@ -1,0 +1,105 @@
+"""Structural completeness checks (rule family STRUCT-*).
+
+PR 6 grew ``DeviceCohortState`` by seven telemetry fields and the
+sharding specs had to be extended by hand — the reviewer was the only
+check that ``sharding/specs.py`` still covered every field.  This pass
+makes that mechanical:
+
+  STRUCT-PSPEC   a ``DeviceCohortState`` field has no PartitionSpec in
+                 ``repro.sharding.cohort_pspecs``
+  STRUCT-STALE   ``cohort_pspecs`` carries a spec for a field that no
+                 longer exists (dead spec — usually a rename half done)
+  STRUCT-DTYPE   dtype discipline over a constructed state: every array
+                 leaf must be int32 (counters/rings/census — the device
+                 engine's whole protocol state is int32 so it lives
+                 inside the jitted while_loop without widening) or
+                 float32 (model/accumulator blocks); any int64/float64
+                 leaf silently breaks host<->device bit parity
+
+The checks introspect the real dataclasses/NamedTuples and a real
+(tiny) engine state rather than a hand-maintained mirror list, so they
+cannot drift from the code they audit.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Mapping, Sequence
+
+from repro.analysis.base import Violation
+
+_WHERE = "repro.cohort.state.DeviceCohortState"
+
+
+def check_state_coverage(fields: Sequence[str],
+                         pspecs: Mapping[str, Any],
+                         where: str = _WHERE) -> List[Violation]:
+    """Pure core: every state field has a spec, every spec has a field."""
+    out: List[Violation] = []
+    for f in fields:
+        if f not in pspecs:
+            out.append(Violation(
+                "STRUCT-PSPEC", where, 0,
+                f"state field {f!r} has no PartitionSpec in "
+                f"repro.sharding.cohort_pspecs — the [C, ...] block "
+                f"would silently replicate (or crash) on a sharded "
+                f"mesh; add it to sharding/specs.py"))
+    for f in pspecs:
+        if f not in fields:
+            out.append(Violation(
+                "STRUCT-STALE", where, 0,
+                f"cohort_pspecs declares a spec for {f!r}, which is not "
+                f"a state field — remove the dead spec"))
+    return out
+
+
+def check_state_dtypes(state_fields: Mapping[str, Any],
+                       where: str = _WHERE) -> List[Violation]:
+    """Pure core: int32/float32 discipline over realized array leaves."""
+    import numpy as np
+    out: List[Violation] = []
+    for name, leaf in state_fields.items():
+        dt = np.dtype(getattr(leaf, "dtype", np.asarray(leaf).dtype))
+        if np.issubdtype(dt, np.floating) and dt != np.float32:
+            out.append(Violation(
+                "STRUCT-DTYPE", where, 0,
+                f"field {name!r} is {dt}, want float32 — f64 "
+                f"accumulators diverge from the device engine's XLA "
+                f"f32 path and break bit parity"))
+        elif np.issubdtype(dt, np.integer) and dt != np.int32:
+            out.append(Violation(
+                "STRUCT-DTYPE", where, 0,
+                f"field {name!r} is {dt}, want int32 — the jitted "
+                f"while_loop carries every counter as i32; a widened "
+                f"counter changes wraparound/census semantics"))
+        elif not (np.issubdtype(dt, np.floating)
+                  or np.issubdtype(dt, np.integer)):
+            out.append(Violation(
+                "STRUCT-DTYPE", where, 0,
+                f"field {name!r} has non-numeric dtype {dt}"))
+    return out
+
+
+def _tiny_device_state() -> Dict[str, Any]:
+    """A real (small) DeviceCohortState, as the engine constructs it."""
+    from repro.cohort.device import DeviceCohortEngine
+    from repro.cohort.tasks import as_cohort_task
+    from repro.core.tasks import LogRegTask
+    from repro.data import make_binary_dataset
+
+    X, y = make_binary_dataset(24, 4, seed=0, noise=0.3)
+    task = LogRegTask(X, y, l2=0.1, sample_seed=1)
+    eng = DeviceCohortEngine(as_cohort_task(task, 4),
+                             sizes_per_client=[2],
+                             round_stepsizes=[0.1], d=1, seed=0)
+    return eng.state._asdict()
+
+
+def check_cohort_structure() -> List[Violation]:
+    """Run both checks against the live repo modules."""
+    from repro.cohort.state import DeviceCohortState
+    from repro.sharding import cohort_mesh, cohort_pspecs
+
+    pspecs = cohort_pspecs(cohort_mesh(), 8)
+    out = check_state_coverage(DeviceCohortState._fields, pspecs)
+    if not out:   # dtype pass needs a constructible state
+        out.extend(check_state_dtypes(_tiny_device_state()))
+    return out

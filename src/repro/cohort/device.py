@@ -65,6 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.analysis.salts import NOISE_SALT
 from repro.cohort.state import (FRAC_BITS, DeviceCohortState,
                                 default_max_ticks, next_pow2, pad_sizes,
                                 speed_accrual)
@@ -101,7 +102,7 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
     """
     dp_on = dp_sigma > 0.0 or dp_round_clip > 0.0
     noise_scale = dp_clip * dp_sigma
-    noise_base = jax.random.PRNGKey(seed ^ 0x5EED)   # == host engine's
+    noise_base = jax.random.PRNGKey(seed ^ NOISE_SALT)   # == host engine's
     run_block = ctask.block_body(b_stat)
     cidx = jnp.arange(C)
     S = STALE_BINS
@@ -557,11 +558,26 @@ class DeviceCohortEngine:
         first_segment = True
         while True:
             target = min(next_eval, max_rounds)
+            # scalar segment bounds are committed to device OUTSIDE the
+            # transfer guard below — the guarded steady dispatch must
+            # see device-resident operands only
+            tgt = jnp.int32(target)
+            lim = jnp.int32(max_ticks)
             with timer.phase("first_segment" if first_segment
                              else "steady"):
-                st = seg(st, self._etas_dev, self._sizes_dev,
-                         self._accrual_dev, jnp.int32(target),
-                         jnp.int32(max_ticks))
+                if first_segment:
+                    # compile + closure-constant upload happen here
+                    st = seg(st, self._etas_dev, self._sizes_dev,
+                             self._accrual_dev, tgt, lim)
+                else:
+                    # runtime sanitizer (parity contract): a steady
+                    # segment performs ZERO implicit host<->device
+                    # transfers between eval syncs — a hidden transfer
+                    # raises here instead of silently serializing the
+                    # jitted tick loop
+                    with jax.transfer_guard("disallow"):
+                        st = seg(st, self._etas_dev, self._sizes_dev,
+                                 self._accrual_dev, tgt, lim)
                 self.state = st
                 sk = int(st.server_k)        # the one sync per segment
             first_segment = False

@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.salts import NOISE_SALT
 from repro.cohort.state import (FRAC_BITS, BroadcastRing, CohortState,
                                 UpdateBuckets, default_max_ticks,
                                 next_pow2, pad_sizes, speed_accrual)
@@ -137,7 +138,7 @@ class CohortEngine:
         self.dp_round_clip = float(dp_round_clip)
         self.use_dp_kernel = bool(use_dp_kernel)
         self.interpret = bool(interpret)
-        self.noise_base = jax.random.PRNGKey(seed ^ 0x5EED)
+        self.noise_base = jax.random.PRNGKey(seed ^ NOISE_SALT)
 
         self.total_messages = 0
         self.total_broadcasts = 0

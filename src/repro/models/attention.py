@@ -19,7 +19,8 @@ import jax.numpy as jnp
 
 import os
 
-from repro.models.common import apply_rope, fan_in_init, softcap, zeros_init
+from repro.models.common import (apply_rope, expand_rank, fan_in_init,
+                                 softcap, zeros_init)
 
 NEG_INF = -2.0 ** 30
 
@@ -48,7 +49,9 @@ def _project_qkv(cfg, lp, x, positions, *, rope: bool = True):
     k = jnp.einsum("bsd,dk->bsk", x, lp["wk"])
     v = jnp.einsum("bsd,dk->bsk", x, lp["wv"])
     if "bq" in lp:
-        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+        q = q + expand_rank(lp["bq"], q.ndim)
+        k = k + expand_rank(lp["bk"], k.ndim)
+        v = v + expand_rank(lp["bv"], v.ndim)
     q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
     k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
     v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
@@ -300,7 +303,7 @@ def cross_attend(cfg, lp, x, enc_k, enc_v):
     B, Sq, _ = x.shape
     q = jnp.einsum("bsd,dq->bsq", x, lp["wq"])
     if "bq" in lp:
-        q = q + lp["bq"]
+        q = q + expand_rank(lp["bq"], q.ndim)
     q = q.reshape(B, Sq, cfg.n_heads, cfg.head_dim)
     mask = jnp.ones((1, 1, Sq, enc_k.shape[1]), bool)
     out = _scores_to_out(cfg, q, enc_k, enc_v, mask)
@@ -313,6 +316,7 @@ def project_cross_kv(cfg, lp, enc_out):
     k = jnp.einsum("bsd,dk->bsk", enc_out, lp["wk"])
     v = jnp.einsum("bsd,dk->bsk", enc_out, lp["wv"])
     if "bk" in lp:
-        k, v = k + lp["bk"], v + lp["bv"]
+        k = k + expand_rank(lp["bk"], k.ndim)
+        v = v + expand_rank(lp["bv"], v.ndim)
     return (k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim),
             v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim))

@@ -39,6 +39,13 @@ def ones_init(_key, shape, dtype):
 # Norms
 # ---------------------------------------------------------------------------
 
+def expand_rank(v, ndim: int):
+    """Left-pad ``v`` with unit axes so it broadcasts against a rank-``ndim``
+    array along trailing axes.  Explicit so the suite can run with
+    ``jax_numpy_rank_promotion='raise'``."""
+    return jnp.reshape(v, (1,) * (ndim - v.ndim) + v.shape)
+
+
 def rms_norm(x, scale, eps: float = 1e-6, *, gemma_style: bool = False):
     """RMSNorm.  gemma_style uses (1 + scale) weighting."""
     dtype = x.dtype
@@ -47,7 +54,7 @@ def rms_norm(x, scale, eps: float = 1e-6, *, gemma_style: bool = False):
     x = x * jax.lax.rsqrt(var + eps)
     w = (1.0 + scale.astype(jnp.float32)) if gemma_style \
         else scale.astype(jnp.float32)
-    return (x * w).astype(dtype)
+    return (x * expand_rank(w, x.ndim)).astype(dtype)
 
 
 def layer_norm(x, scale, bias, eps: float = 1e-5):
@@ -56,8 +63,8 @@ def layer_norm(x, scale, bias, eps: float = 1e-5):
     mean = jnp.mean(x, axis=-1, keepdims=True)
     var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
     x = (x - mean) * jax.lax.rsqrt(var + eps)
-    return (x * scale.astype(jnp.float32)
-            + bias.astype(jnp.float32)).astype(dtype)
+    return (x * expand_rank(scale.astype(jnp.float32), x.ndim)
+            + expand_rank(bias.astype(jnp.float32), x.ndim)).astype(dtype)
 
 
 def apply_norm(cfg, x, params):
@@ -107,7 +114,8 @@ def apply_rope(x, positions, theta: float):
         return x
     head_dim = x.shape[-1]
     freqs = rope_frequencies(head_dim, theta)
-    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    pos = positions[..., None].astype(jnp.float32)             # (..., S, 1)
+    angles = pos * expand_rank(freqs, pos.ndim)                # (..., S, hd/2)
     angles = angles[..., None, :]                              # (..., S, 1, hd/2)
     sin, cos = jnp.sin(angles), jnp.cos(angles)
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
@@ -157,7 +165,7 @@ def unembed(cfg, params, x):
     Vp = table.shape[0]
     if Vp != cfg.vocab_size:   # mask padded rows out of the softmax
         valid = jnp.arange(Vp) < cfg.vocab_size
-        logits = jnp.where(valid, logits, -1e30)
+        logits = jnp.where(expand_rank(valid, logits.ndim), logits, -1e30)
     return logits
 
 

@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import fan_in_init, gated_act
+from repro.models.common import expand_rank, fan_in_init, gated_act
 
 
 def init_mlp(cfg, key, dtype, *, n_layers=None, d_ff=None):
@@ -38,9 +38,9 @@ def apply_mlp(cfg, lp, x):
     else:
         h = jnp.einsum("bsd,df->bsf", x, lp["wu"])
         if "bu" in lp:
-            h = h + lp["bu"]
+            h = h + expand_rank(lp["bu"], h.ndim)
         h = jax.nn.gelu(h, approximate=True)
     out = jnp.einsum("bsf,fd->bsd", h, lp["wd"])
     if "bd" in lp:
-        out = out + lp["bd"]
+        out = out + expand_rank(lp["bd"], out.ndim)
     return out

@@ -15,7 +15,7 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import fan_in_init, rms_norm
+from repro.models.common import expand_rank, fan_in_init, rms_norm
 
 
 def ssm_dims(cfg):
@@ -78,7 +78,7 @@ def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None,
     Cc = C.astype(jnp.float32).reshape(b, nc, Q, n)
     Af = A.astype(jnp.float32)
 
-    dA = dtf * Af                                   # (b,nc,Q,h)
+    dA = dtf * expand_rank(Af, dtf.ndim)            # (b,nc,Q,h)
     dA_cum = jnp.cumsum(dA, axis=2)
     # intra-chunk decay matrix L[i,j] = exp(dA_cum[i] - dA_cum[j]), j <= i
     seg = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]   # (b,nc,Q,Q,h)
@@ -163,7 +163,7 @@ def causal_depthwise_conv(x, w, b):
         dimension_numbers=("NWC", "WIO", "NWC"),
         feature_group_count=x.shape[-1],
     )
-    return (out + b.astype(jnp.float32)).astype(x.dtype)
+    return (out + expand_rank(b.astype(jnp.float32), out.ndim)).astype(x.dtype)
 
 
 def _split_proj(cfg, zxbcdt):
@@ -187,7 +187,8 @@ def apply_ssm(cfg, lp, x, *, return_state: bool = False, ssd_fn=None,
     Cm = xBC[..., d_inner + N:]
 
     dt = jax.nn.softplus(dt.astype(jnp.float32)
-                         + lp["dt_bias"].astype(jnp.float32))
+                         + expand_rank(lp["dt_bias"].astype(jnp.float32),
+                                       dt.ndim))
     A = -jnp.exp(lp["A_log"].astype(jnp.float32))
 
     P = cfg.ssm_head_dim
@@ -241,7 +242,7 @@ def decode_ssm(cfg, lp, x, h_state, conv_state):
                           axis=1)                               # (B,W,conv)
     conv_out = jnp.einsum("bwc,cw->bc", win.astype(jnp.float32),
                           lp["conv_w"].astype(jnp.float32)) \
-        + lp["conv_b"].astype(jnp.float32)
+        + expand_rank(lp["conv_b"].astype(jnp.float32), 2)
     xBC_act = jax.nn.silu(conv_out)
     new_conv = win[:, 1:, :].astype(jnp.float32)
 
@@ -250,12 +251,13 @@ def decode_ssm(cfg, lp, x, h_state, conv_state):
     Cm = xBC_act[..., d_inner + N:]
 
     dt = jax.nn.softplus(dt.astype(jnp.float32)
-                         + lp["dt_bias"].astype(jnp.float32))   # (B,H)
+                         + expand_rank(lp["dt_bias"].astype(jnp.float32),
+                                       dt.ndim))                # (B,H)
     A = -jnp.exp(lp["A_log"].astype(jnp.float32))               # (H,)
     P = cfg.ssm_head_dim
     xh = xs.reshape(B_, H, P).astype(jnp.float32)
 
-    decay = jnp.exp(dt * A)                                     # (B,H)
+    decay = jnp.exp(dt * expand_rank(A, dt.ndim))               # (B,H)
     new_h = h_state * decay[..., None, None] \
         + jnp.einsum("bh,bn,bhp->bhnp", dt, Bm, xh)
     y = jnp.einsum("bn,bhnp->bhp", Cm, new_h) \

@@ -35,10 +35,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-AVAIL_SALT = 0xA7A1B      # availability threefry chain: seed ^ AVAIL_SALT
-PHASE_SALT = 0xD1A7       # numpy stream for diurnal phase draws
-REGION_SALT = 0x2E610     # regional-churn shared-factor threefry chain
-RENEW_SALT = 0x9E4A1      # renewal-churn threefry / numpy streams
+# Salt constants live in the central registry (repro.analysis.salts);
+# re-exported here for back-compat.  The PRNG auditor enforces that key
+# creations use these registry imports, never ad-hoc literals.
+from repro.analysis.salts import (AVAIL_SALT, PHASE_SALT, REGION_SALT,
+                                  RENEW_SALT, SPEED_SALT)
 
 
 @dataclass(frozen=True)
@@ -421,7 +422,7 @@ class SpeedModel:
     min_speed: float = 1e-3
 
     def draw(self, C: int, seed: int) -> np.ndarray:
-        rng = np.random.default_rng(seed ^ 0x5BEED)
+        rng = np.random.default_rng(seed ^ SPEED_SALT)
         if self.kind == "uniform":
             s = rng.uniform(self.lo, self.hi, C)
         elif self.kind == "bimodal":

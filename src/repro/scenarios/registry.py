@@ -39,14 +39,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# Salt constants live in the central registry (repro.analysis.salts);
+# re-exported here for back-compat.  The PRNG auditor enforces that key
+# creations use these registry imports, never ad-hoc literals.
+from repro.analysis.salts import LAT_SALT, TABLE_SALT
 from repro.scenarios.availability import (AlwaysOn, Churn, Diurnal,
                                           RegionalChurn, RenewalChurn,
                                           SpeedModel)
 from repro.scenarios.tables import (LatencyTable, alias_sample_rows,
                                     key_uniforms, vose_alias)
-
-LAT_SALT = 0x1A7E9C       # latency threefry chain: seed ^ LAT_SALT
-TABLE_SALT = 0x7AB1E      # numpy stream for drawn table assignments
 
 
 def next_pow2(n: int) -> int:

@@ -4,8 +4,15 @@ import sys
 # src-layout import without install
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import jax
 import numpy as np
 import pytest
+
+# Sanitizer: implicit NumPy rank promotion (rank-1 bias against a rank-3
+# activation, etc.) is a silent-wrong-shape hazard under sharding — the
+# whole suite runs with it hard-disabled.  src/repro broadcasts explicitly
+# (see repro.models.common.expand_rank).
+jax.config.update("jax_numpy_rank_promotion", "raise")
 
 
 def pytest_addoption(parser):
