@@ -49,6 +49,18 @@ L = next_pow2(max latency ticks) and the per-slot scatter unrolls with
 it) — recording ring length L, compile+warm seconds, and steady-state
 run seconds for each.
 
+A sixth workload (``aggregation_zoo``) runs the server-side
+aggregation strategies (``repro.core.strategies``: paper default,
+FedAsync constant/hinge/poly decay, FedBuff) head-to-head on the
+device engine under the scenario presets.  One seed per preset means
+one message schedule per preset — latency draws, availability, and the
+staleness census are strategy-invariant by construction — so the grid
+it emits (eval-loss trajectory + staleness histogram per strategy x
+preset cell) attributes convergence differences to the aggregation
+rule alone.  ``run_aggregation_zoo(grid_path=...)`` also writes the
+grid standalone (CI uploads it as the ``aggregation-zoo-grid``
+artifact).
+
 Writes ``BENCH_cohort.json`` (cwd) with the raw numbers.  Each cohort /
 device entry carries a ``phases`` block — ``compile_s`` (first run,
 cold jit cache), ``warmup_s`` (second run, warm jit), ``steady_s``
@@ -299,6 +311,68 @@ def run_heavy_tail(report=None):
     return rows
 
 
+ZOO_STRATEGIES = {
+    "paper": None,
+    "fedasync_const": {"kind": "fedasync", "decay": "constant"},
+    # hinge_b=0: decay every stale apply (the presets' gate keeps tau
+    # small, so the FLGo default b=6 would never leave the flat region)
+    "fedasync_hinge": {"kind": "fedasync", "decay": "hinge",
+                       "hinge_b": 0},
+    "fedasync_poly": "fedasync",
+    "fedbuff": {"kind": "fedbuff", "buffer_size": 4},
+}
+ZOO_PRESETS = ["mobile_diurnal", "iot_straggler"]
+
+
+def run_aggregation_zoo(report=None, grid_path=None):
+    """Aggregation-zoo workload: convergence-vs-staleness grid.
+
+    Every strategy runs the device engine under the SAME seed, preset,
+    and gate, so each preset column shares one message schedule and one
+    staleness histogram; the rows differ only in the eval-loss
+    trajectory the aggregation rule produces from those arrivals.
+    """
+    X, y = make_binary_dataset(2_048, 32, seed=0, noise=0.3)
+    C, rounds, iters, d = 32, 4, 4, 3
+    kw = dict(sizes_per_client=[iters] * rounds,
+              round_stepsizes=[0.1, 0.08, 0.06, 0.05], d=d, seed=0)
+    own_report = report is None
+    report = {} if own_report else report
+    grid = {"clients": C, "rounds": rounds, "iters_per_round": iters,
+            "d": d, "engine": "device", "presets": {}}
+    rows = []
+    task = as_cohort_task(_mk_task(X, y), C)
+    for preset in ZOO_PRESETS:
+        cell = {}
+        for sname, spec in ZOO_STRATEGIES.items():
+            cfg = FLConfig(engine="device", cohort_block=8,
+                           scenario=preset, aggregation=spec)
+            sim = make_simulator(cfg, task, n_clients=C, **kw)
+            t0 = time.time()
+            res = sim.run(max_rounds=rounds, eval_every=1)
+            dt = time.time() - t0
+            tel = res["telemetry"]
+            cell[sname] = {
+                "losses": [float(h["loss"]) for h in res["history"]],
+                "final_loss": float(res["final"]["loss"]),
+                "messages": int(res["final"]["messages"]),
+                "staleness_hist": [int(x) for x in tel.staleness_hist],
+                "sec": dt,
+            }
+            rows.append((f"cohort_scale_agg_zoo_{preset}_{sname}",
+                         dt * 1e6,
+                         f"final loss {cell[sname]['final_loss']:.4f}; "
+                         f"tau-hist {cell[sname]['staleness_hist']}"))
+        grid["presets"][preset] = cell
+    report["aggregation_zoo"] = grid
+    if grid_path:
+        with open(grid_path, "w") as f:
+            json.dump(grid, f, indent=2)
+    if own_report:
+        _merge_write(report)
+    return rows
+
+
 def run():
     X, y = make_binary_dataset(2_048, 32, seed=0, noise=0.3)
     rows, report = [], {}
@@ -361,5 +435,6 @@ def run():
     rows += run_model_scale(report)
     rows += run_scenarios(report)
     rows += run_heavy_tail(report)
+    rows += run_aggregation_zoo(report)
     _merge_write(report)
     return rows

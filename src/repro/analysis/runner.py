@@ -3,6 +3,9 @@ over a set of paths, apply the (normally empty) baseline, and report.
 
 Rule families:
   * PRNG-*    salt-registry audit of PRNG key creations (AST)
+  * PRNG-FOLDIN-*  fold_in argument-tuple discipline per salt chain
+              (duplicate constants, const/variable mixing,
+              conflicting variable addresses — AST)
   * PURITY-*  host-world constructs inside traced functions (AST)
   * STRUCT-*  DeviceCohortState vs sharding-spec completeness + dtype
               discipline (introspection; needs the repro package
@@ -25,13 +28,14 @@ def run_analysis(paths: Sequence[str], *,
                  trace_d: Optional[int] = None,
                  ) -> Tuple[List[Violation], List[Violation]]:
     """-> (all violations, violations remaining after the baseline)."""
-    from repro.analysis import invariants, prng, purity, salts, structure \
-        as structure_mod
+    from repro.analysis import (foldin, invariants, prng, purity, salts,
+                                structure as structure_mod)
 
     files = iter_py_files(paths) if paths else []
     violations: List[Violation] = []
     violations.extend(salts.check_registry())
     violations.extend(prng.check_files(files))
+    violations.extend(foldin.check_files(files))
     violations.extend(purity.check_files(files))
     if structure:
         violations.extend(structure_mod.check_cohort_structure())

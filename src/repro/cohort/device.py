@@ -69,6 +69,7 @@ from repro.analysis.salts import NOISE_SALT
 from repro.cohort.state import (FRAC_BITS, DeviceCohortState,
                                 default_max_ticks, next_pow2, pad_sizes,
                                 speed_accrual)
+from repro.core.strategies import get_strategy
 from repro.kernels.cohort_dp import cohort_clip_noise
 from repro.scenarios import (get_scenario, legacy_latency_scenario,
                              scenario_plan)
@@ -90,7 +91,7 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                    d_gate: int, L: int, R: int, B: int, Q: int, F: int,
                    plan, dp_clip: float, dp_sigma: float,
                    dp_round_clip: float, use_dp_kernel: bool,
-                   interpret: bool, seed: int):
+                   interpret: bool, seed: int, strategy):
     """Compile the eval-boundary segment runner for one configuration.
 
     Returns ``segment(state, etas, sizes, accrual, target_k, tick_limit)``
@@ -102,6 +103,15 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
     """
     dp_on = dp_sigma > 0.0 or dp_round_clip > 0.0
     noise_scale = dp_clip * dp_sigma
+    # server-side aggregation strategy (repro.core.strategies), resolved
+    # at trace time: the paper default applies the due [D] bucket as-is;
+    # FedAsync keeps a sender-k-stratified [R, D] twin of each bucket
+    # and decays strata at apply; FedBuff banks due buckets and flushes
+    # every BUF-th message.  All strategy branches are Python-level, so
+    # the default tick's jaxpr — and the goldens it pins — is unchanged.
+    stratified = strategy.stratified
+    buffered = strategy.buffered
+    BUF = strategy.buffer_size if buffered else 0
     noise_base = jax.random.PRNGKey(seed ^ NOISE_SALT)   # == host engine's
     run_block = ctask.block_body(b_stat)
     cidx = jnp.arange(C)
@@ -131,43 +141,91 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                 # ticks (far arrivals are the latency tail)
 
                 def pop_ovf(_):
-                    return (jnp.sum(st.ovf_vec
-                                    * ovf_hit.astype(jnp.float32)[:, None],
-                                    axis=0),
-                            jnp.sum(st.ovf_cnt
-                                    * ovf_hit.astype(jnp.int32)[:, None],
-                                    axis=0),
-                            jnp.sum(st.ovf_ks
-                                    * ovf_hit.astype(jnp.int32)[:, None],
-                                    axis=0))
+                    out = (jnp.sum(st.ovf_vec
+                                   * ovf_hit.astype(jnp.float32)[:, None],
+                                   axis=0),
+                           jnp.sum(st.ovf_cnt
+                                   * ovf_hit.astype(jnp.int32)[:, None],
+                                   axis=0),
+                           jnp.sum(st.ovf_ks
+                                   * ovf_hit.astype(jnp.int32)[:, None],
+                                   axis=0))
+                    if stratified:
+                        out += (jnp.sum(
+                            st.ovf_kvec
+                            * ovf_hit.astype(jnp.float32)[:, None, None],
+                            axis=0),)
+                    return out
 
-                ovf_vec_t, ovf_cnt_t, ovf_ks_t = lax.cond(
-                    jnp.any(ovf_hit), pop_ovf,
-                    lambda _: (jnp.zeros((D,), jnp.float32),
-                               jnp.zeros((R,), jnp.int32),
-                               jnp.zeros((R,), jnp.int32)), None)
+                def no_ovf(_):
+                    out = (jnp.zeros((D,), jnp.float32),
+                           jnp.zeros((R,), jnp.int32),
+                           jnp.zeros((R,), jnp.int32))
+                    if stratified:
+                        out += (jnp.zeros((R, D), jnp.float32),)
+                    return out
+
+                popped = lax.cond(jnp.any(ovf_hit), pop_ovf, no_ovf,
+                                  None)
+                ovf_vec_t, ovf_cnt_t, ovf_ks_t = popped[:3]
                 cnt_total = cnt_row + ovf_cnt_t
                 ks_total = ks_row + ovf_ks_t
                 # overflow + ring_slot in THIS order — the host engine
                 # applies far + near the same way (bit parity)
-                v = jnp.where(jnp.sum(cnt_total) > 0,
-                              st.v - (ovf_vec_t + st.upd_vec[slot]),
-                              st.v)
+                arr_due = ovf_vec_t + st.upd_vec[slot]
+                kvec_due = (popped[3] + st.upd_kvec[slot]
+                            if stratified else None)
                 ovf_vec = jnp.where(ovf_hit[:, None], 0.0, st.ovf_vec)
                 ovf_at = jnp.where(ovf_hit, 0, st.ovf_at)
                 ovf_cnt = jnp.where(ovf_hit[:, None], 0, st.ovf_cnt)
                 ovf_ks = jnp.where(ovf_hit[:, None], 0, st.ovf_ks)
+                ovf_kvec = (jnp.where(ovf_hit[:, None, None], 0.0,
+                                      st.ovf_kvec)
+                            if stratified else st.ovf_kvec)
             else:
                 cnt_total = cnt_row
                 ks_total = ks_row
-                v = jnp.where(jnp.sum(cnt_row) > 0,
-                              st.v - st.upd_vec[slot], st.v)
+                arr_due = st.upd_vec[slot]
+                kvec_due = st.upd_kvec[slot] if stratified else None
                 ovf_vec, ovf_at, ovf_cnt, ovf_ks = (
                     st.ovf_vec, st.ovf_at, st.ovf_cnt, st.ovf_ks)
+                ovf_kvec = st.ovf_kvec
+            has_arrivals = jnp.sum(cnt_total) > 0
+            if stratified:
+                # FedAsync: decay each sender-k stratum of the due
+                # bucket by its staleness — the IDENTICAL expression
+                # the host engine jits in _make_strat_apply
+                tau_a = ((st.server_k - jnp.arange(R, dtype=jnp.int32))
+                         & (R - 1))
+                dec = strategy.decay_weights(tau_a)
+                v = jnp.where(has_arrivals,
+                              st.v - jnp.sum(kvec_due * dec[:, None],
+                                             axis=0),
+                              st.v)
+                buf_vec, buf_cnt = st.buf_vec, st.buf_cnt
+            elif buffered:
+                # FedBuff: bank the due bucket, flush (and reset) on
+                # every BUF-th banked message — the host engine flushes
+                # on the same python-side counter
+                buf_vec = jnp.where(has_arrivals,
+                                    st.buf_vec + arr_due, st.buf_vec)
+                buf_cnt = st.buf_cnt + jnp.sum(cnt_total)
+                flush = buf_cnt >= BUF
+                v = jnp.where(flush, st.v - buf_vec, st.v)
+                buf_vec = jnp.where(flush,
+                                    jnp.zeros((D,), jnp.float32),
+                                    buf_vec)
+                buf_cnt = jnp.where(flush, 0, buf_cnt)
+            else:
+                v = jnp.where(has_arrivals, st.v - arr_due, st.v)
+                buf_vec, buf_cnt = st.buf_vec, st.buf_cnt
             upd_vec = st.upd_vec.at[slot].set(
                 jnp.zeros((D,), jnp.float32))
             upd_cnt = st.upd_cnt.at[slot].set(jnp.zeros((R,), jnp.int32))
             upd_ks = st.upd_ks.at[slot].set(jnp.zeros((R,), jnp.int32))
+            upd_kvec = (st.upd_kvec.at[slot].set(
+                jnp.zeros((R, D), jnp.float32))
+                if stratified else st.upd_kvec)
             h_counts = st.h_counts + cnt_total
             # staleness-at-apply census: slot r of ks_total counts the
             # arrivals whose sender saw broadcast counter r (mod R); the
@@ -246,8 +304,9 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
             bytes_up = st.bytes_up + done_i32 * upd_bytes
 
             def do_complete(ops):
-                (w, U, upd_vec, upd_cnt, upd_ks, ovf_vec, ovf_at,
-                 ovf_cnt, ovf_ks, ovf_hwm, far_msgs, err) = ops
+                (w, U, upd_vec, upd_cnt, upd_ks, upd_kvec, ovf_vec,
+                 ovf_at, ovf_cnt, ovf_ks, ovf_kvec, ovf_hwm, far_msgs,
+                 err) = ops
                 if dp_on:
                     nk = jax.random.fold_in(noise_base, t)
                     noised, _ = cohort_clip_noise(
@@ -271,15 +330,35 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                 # unrolled masked sums, NOT a scatter-add: each slot's
                 # vector must be the host engine's _weighted_sum over the
                 # full client axis (same expression, same float add
-                # order) or host<->device bit parity breaks
-                for sl in range(L):
-                    in_l = near & (arr_slot == sl)
-                    vec = jnp.sum(
-                        sent * (eta * in_l.astype(jnp.float32))[:, None],
-                        axis=0)
-                    upd_vec = upd_vec.at[sl].set(
-                        jnp.where(jnp.any(in_l), upd_vec[sl] + vec,
-                                  upd_vec[sl]))
+                # order) or host<->device bit parity breaks.  FedAsync
+                # stratifies by the sender's freshest-seen k (mod R)
+                # instead, mirroring the host's _make_strat_insert row
+                # loop — rows with no arrivals keep their old value
+                # bitwise (guarded add, not old + 0).
+                kmod = k & (R - 1) if stratified else None
+                if stratified:
+                    for sl in range(L):
+                        in_l = near & (arr_slot == sl)
+                        for r in range(R):
+                            in_lr = in_l & (kmod == r)
+                            vec = jnp.sum(
+                                sent * (eta * in_lr.astype(
+                                    jnp.float32))[:, None],
+                                axis=0)
+                            upd_kvec = upd_kvec.at[sl, r].set(
+                                jnp.where(jnp.any(in_lr),
+                                          upd_kvec[sl, r] + vec,
+                                          upd_kvec[sl, r]))
+                else:
+                    for sl in range(L):
+                        in_l = near & (arr_slot == sl)
+                        vec = jnp.sum(
+                            sent
+                            * (eta * in_l.astype(jnp.float32))[:, None],
+                            axis=0)
+                        upd_vec = upd_vec.at[sl].set(
+                            jnp.where(jnp.any(in_l), upd_vec[sl] + vec,
+                                      upd_vec[sl]))
                 oh_l = ((arr_slot[:, None] == jnp.arange(L)[None, :])
                         & near[:, None]).astype(jnp.int32)         # [C, L]
                 oh_r = ((st.i & (R - 1))[:, None]
@@ -299,8 +378,8 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                         far_mask.astype(jnp.int32))
 
                     def do_far(fops):
-                        ovf_vec, ovf_at, ovf_cnt, ovf_ks, ovf_hwm, \
-                            err = fops
+                        (ovf_vec, ovf_at, ovf_cnt, ovf_ks, ovf_kvec,
+                         ovf_hwm, err) = fops
                         remaining = far_mask
                         # one unroll step per DISTINCT far arrival tick,
                         # ascending (matches the host's np.unique order);
@@ -329,9 +408,26 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                             idx = jnp.where(has_match, jnp.argmax(match),
                                             jnp.argmax(free))
                             write = any_grp & ok
-                            ovf_vec = ovf_vec.at[idx].set(
-                                jnp.where(write, ovf_vec[idx] + vec,
-                                          ovf_vec[idx]))
+                            if stratified:
+                                # sender-k-stratified twin insert — the
+                                # host runs _make_strat_insert on the
+                                # same far bucket; guard per stratum so
+                                # empty rows stay bitwise untouched
+                                for r in range(R):
+                                    grp_r = grp & (kmod == r)
+                                    vec_r = jnp.sum(
+                                        sent * (eta * grp_r.astype(
+                                            jnp.float32))[:, None],
+                                        axis=0)
+                                    ovf_kvec = ovf_kvec.at[idx, r].set(
+                                        jnp.where(
+                                            write & jnp.any(grp_r),
+                                            ovf_kvec[idx, r] + vec_r,
+                                            ovf_kvec[idx, r]))
+                            else:
+                                ovf_vec = ovf_vec.at[idx].set(
+                                    jnp.where(write, ovf_vec[idx] + vec,
+                                              ovf_vec[idx]))
                             ovf_cnt = ovf_cnt.at[idx].set(
                                 jnp.where(write, ovf_cnt[idx] + cnt,
                                           ovf_cnt[idx]))
@@ -351,22 +447,25 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                             ovf_hwm,
                             jnp.sum((ovf_at != 0).astype(jnp.int32)))
                         return (ovf_vec, ovf_at, ovf_cnt, ovf_ks,
-                                ovf_hwm, err)
+                                ovf_kvec, ovf_hwm, err)
 
-                    (ovf_vec, ovf_at, ovf_cnt, ovf_ks, ovf_hwm,
-                     err) = lax.cond(
+                    (ovf_vec, ovf_at, ovf_cnt, ovf_ks, ovf_kvec,
+                     ovf_hwm, err) = lax.cond(
                         jnp.any(far_mask), do_far, lambda fops: fops,
-                        (ovf_vec, ovf_at, ovf_cnt, ovf_ks, ovf_hwm,
-                         err))
+                        (ovf_vec, ovf_at, ovf_cnt, ovf_ks, ovf_kvec,
+                         ovf_hwm, err))
                 U = jnp.where(done[:, None], 0.0, sent)
-                return (w, U, upd_vec, upd_cnt, upd_ks, ovf_vec,
-                        ovf_at, ovf_cnt, ovf_ks, ovf_hwm, far_msgs, err)
+                return (w, U, upd_vec, upd_cnt, upd_ks, upd_kvec,
+                        ovf_vec, ovf_at, ovf_cnt, ovf_ks, ovf_kvec,
+                        ovf_hwm, far_msgs, err)
 
-            (w, U, upd_vec, upd_cnt, upd_ks, ovf_vec, ovf_at, ovf_cnt,
-             ovf_ks, ovf_hwm, far_msgs, err) = lax.cond(
+            (w, U, upd_vec, upd_cnt, upd_ks, upd_kvec, ovf_vec, ovf_at,
+             ovf_cnt, ovf_ks, ovf_kvec, ovf_hwm, far_msgs,
+             err) = lax.cond(
                 jnp.any(done), do_complete, lambda ops: ops,
-                (w, U, upd_vec, upd_cnt, upd_ks, ovf_vec, ovf_at,
-                 ovf_cnt, ovf_ks, st.ovf_hwm, st.far_msgs, st.err))
+                (w, U, upd_vec, upd_cnt, upd_ks, upd_kvec, ovf_vec,
+                 ovf_at, ovf_cnt, ovf_ks, ovf_kvec, st.ovf_hwm,
+                 st.far_msgs, st.err))
             i = jnp.where(done, st.i + 1, st.i)
             h = jnp.where(done, 0, h)
             credit = jnp.where(
@@ -380,7 +479,8 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                 ovf_cnt=ovf_cnt, err=err, messages=messages,
                 broadcasts=broadcasts, part=part, bytes_up=bytes_up,
                 stale_hist=stale_hist, upd_ks=upd_ks, ovf_ks=ovf_ks,
-                ovf_hwm=ovf_hwm, far_msgs=far_msgs)
+                ovf_hwm=ovf_hwm, far_msgs=far_msgs, upd_kvec=upd_kvec,
+                ovf_kvec=ovf_kvec, buf_vec=buf_vec, buf_cnt=buf_cnt)
 
         return lax.while_loop(
             lambda s: ((s.server_k < target_k) & (s.tick < tick_limit)
@@ -401,7 +501,7 @@ class DeviceCohortEngine:
                  dp_sigma: float = 0.0, dp_clip: float = 0.0,
                  dp_round_clip: float = 0.0, use_dp_kernel: bool = True,
                  interpret: bool = True, scenario=None, trace=None,
-                 dp_delta: float = 1e-5):
+                 dp_delta: float = 1e-5, strategy=None):
         self.ctask = ctask
         C = ctask.C
         self.C = C
@@ -459,6 +559,7 @@ class DeviceCohortEngine:
                   if self.F else 1)
         self.R = next_pow2(self.d_gate + 2)
         self.B = next_pow2(self.d_gate + 2)
+        self.strategy = get_strategy(strategy)
         self.b_stat = next_pow2(
             max(1, min(2 * self.block, int(self.sizes.max()))))
 
@@ -498,7 +599,17 @@ class DeviceCohortEngine:
             stale_hist=jnp.zeros((STALE_BINS,), jnp.int32),
             upd_ks=jnp.zeros((L, R), jnp.int32),
             ovf_ks=jnp.zeros((Q, R), jnp.int32),
-            ovf_hwm=jnp.int32(0), far_msgs=jnp.int32(0))
+            ovf_hwm=jnp.int32(0), far_msgs=jnp.int32(0),
+            # aggregation-strategy buffers: full-size only when the
+            # strategy uses them ([1, ...] dummies otherwise keep the
+            # donated state pytree small under the paper default)
+            upd_kvec=jnp.zeros((L, R, D) if self.strategy.stratified
+                               else (1, 1, 1), jnp.float32),
+            ovf_kvec=jnp.zeros((Q, R, D) if self.strategy.stratified
+                               else (1, 1, 1), jnp.float32),
+            buf_vec=jnp.zeros((D,) if self.strategy.buffered else (1,),
+                              jnp.float32),
+            buf_cnt=jnp.int32(0))
         return DeviceCohortState(**{
             f: jax.device_put(val, self._shardings[f])
             for f, val in fields.items()})
@@ -509,7 +620,7 @@ class DeviceCohortEngine:
                self.d_gate, self.L, self.R, self.B, self.Q,
                self._plan.fingerprint(), self.dp_clip, self.dp_sigma,
                self.dp_round_clip, self.use_dp_kernel, self.interpret,
-               self.seed)
+               self.seed, self.strategy.fingerprint())
         cache = getattr(self.ctask, "_segment_fns", None)
         if cache is None:
             cache = self.ctask._segment_fns = {}
@@ -522,7 +633,8 @@ class DeviceCohortEngine:
                 plan=self._plan, dp_clip=self.dp_clip,
                 dp_sigma=self.dp_sigma, dp_round_clip=self.dp_round_clip,
                 use_dp_kernel=self.use_dp_kernel,
-                interpret=self.interpret, seed=self.seed)
+                interpret=self.interpret, seed=self.seed,
+                strategy=self.strategy)
         return fn
 
     @property

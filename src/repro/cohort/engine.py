@@ -43,10 +43,23 @@ from repro.analysis.salts import NOISE_SALT
 from repro.cohort.state import (FRAC_BITS, BroadcastRing, CohortState,
                                 UpdateBuckets, default_max_ticks,
                                 next_pow2, pad_sizes, speed_accrual)
+from repro.core.strategies import get_strategy
 from repro.kernels.cohort_dp import cohort_clip_noise
 from repro.scenarios import get_scenario, scenario_plan
 from repro.telemetry import (STALE_BINS, PhaseTimer, build_report,
                              open_trace, staleness_bin, update_msg_bytes)
+
+
+def _commit(x, dtype=None):
+    """Explicit host->device transfer of a host value.
+
+    The steady-segment ticks run under ``jax.transfer_guard("disallow")``
+    (parity with ``DeviceCohortEngine.run``), where a dtype-converting
+    ``jnp.asarray`` counts as an IMPLICIT transfer and raises; numpy does
+    the conversion (IEEE round-to-nearest, bit-identical to XLA's
+    convert_element_type) and ``device_put`` commits it explicitly.
+    """
+    return jax.device_put(np.asarray(x, dtype))
 
 
 @jax.jit
@@ -76,6 +89,36 @@ def _add_scaled_rows(w, delta, eta, mask):
     return w + jnp.where(mask[:, None], eta[:, None] * delta, 0.0)
 
 
+def _make_strat_apply(strategy, R: int):
+    """Stratified (FedAsync) apply: decay each sender-k row of the
+    [R, D] bucket by its staleness against the pre-cascade server_k.
+    The device engine evaluates the IDENTICAL expression inside its
+    tick, so the two engines' decayed sums are bitwise equal."""
+    @jax.jit
+    def apply(v, total, server_k):
+        tau = (server_k - jnp.arange(R, dtype=jnp.int32)) & (R - 1)
+        dec = strategy.decay_weights(tau)
+        return v - jnp.sum(total * dec[:, None], axis=0)
+    return apply
+
+
+def _make_strat_insert(R: int):
+    """Stratified bucket insert: merge one finishing group into an
+    [R, D] sender-k bucket row-by-row with the device engine's exact
+    masked-sum + guarded-add expression (rows with no arrivals keep
+    their old value bitwise, not old + 0)."""
+    @jax.jit
+    def insert(cur, sent, eta, in_g, kmod):
+        for r in range(R):
+            in_r = in_g & (kmod == r)
+            vec = jnp.sum(
+                sent * (eta * in_r.astype(jnp.float32))[:, None], axis=0)
+            cur = cur.at[r].set(
+                jnp.where(jnp.any(in_r), cur[r] + vec, cur[r]))
+        return cur
+    return insert
+
+
 class CohortEngine:
     def __init__(self, ctask, *, sizes_per_client,
                  round_stepsizes: Sequence[float], d: int = 1,
@@ -84,7 +127,8 @@ class CohortEngine:
                  block: int = 64, dp_sigma: float = 0.0,
                  dp_clip: float = 0.0, dp_round_clip: float = 0.0,
                  use_dp_kernel: bool = True, interpret: bool = True,
-                 scenario=None, trace=None, dp_delta: float = 1e-5):
+                 scenario=None, trace=None, dp_delta: float = 1e-5,
+                 strategy=None):
         self.ctask = ctask
         C = ctask.C
         self.C = C
@@ -139,6 +183,22 @@ class CohortEngine:
         self.use_dp_kernel = bool(use_dp_kernel)
         self.interpret = bool(interpret)
         self.noise_base = jax.random.PRNGKey(seed ^ NOISE_SALT)
+
+        # server-side aggregation strategy (repro.core.strategies):
+        # the paper default applies [D] arrival buckets on dequeue;
+        # FedAsync stratifies buckets by sender-k into [R, D] rings and
+        # decays at apply; FedBuff accumulates and flushes every B.
+        # R matches the device engine's sender-k ring width.
+        self.strategy = get_strategy(strategy)
+        self.R = next_pow2(self.d_gate + 2)
+        if self.strategy.stratified:
+            self._strat_apply = _make_strat_apply(self.strategy, self.R)
+            self._strat_insert = _make_strat_insert(self.R)
+            self._strat_zero = jnp.zeros((self.R, ctask.D), jnp.float32)
+        if self.strategy.buffered:
+            self._buf_zero = jnp.zeros((ctask.D,), jnp.float32)
+            self._buf_vec = self._buf_zero
+            self._buf_cnt = 0
 
         self.total_messages = 0
         self.total_broadcasts = 0
@@ -197,10 +257,27 @@ class CohortEngine:
         # far + near in THIS order — the device engine applies
         # overflow + ring_slot the same way (bit parity).
         far, near, pairs = self.updates.pop(t)
+        strat = self.strategy
         if far is not None and near is not None:
-            st.v = _apply_contrib(st.v, far + near)
-        elif far is not None or near is not None:
-            st.v = _apply_contrib(st.v, far if far is not None else near)
+            total = far + near
+        else:
+            total = far if far is not None else near
+        if total is not None:
+            if strat.stratified:
+                # FedAsync: total is [R, D] by sender k; decay rows by
+                # staleness against the pre-cascade server_k
+                st.v = self._strat_apply(
+                    st.v, total, _commit(st.server_k, np.int32))
+            elif strat.buffered:
+                # FedBuff: bank this tick's arrivals, flush every B
+                self._buf_vec = self._buf_vec + total
+                self._buf_cnt += len(pairs)
+                if self._buf_cnt >= strat.buffer_size:
+                    st.v = _apply_contrib(st.v, self._buf_vec)
+                    self._buf_vec = self._buf_zero
+                    self._buf_cnt = 0
+            else:
+                st.v = _apply_contrib(st.v, total)
         for r, _c, ks in pairs:
             self._h_counts[r] = self._h_counts.get(r, 0) + 1
             # staleness-at-apply, binned against the PRE-cascade server_k
@@ -218,9 +295,9 @@ class CohortEngine:
         for b in due:
             take = (b["at"] <= t) & (b["k"] > st.k)
             if take.any():
-                eta = jnp.asarray(self._eta_of(st.i), jnp.float32)
+                eta = _commit(self._eta_of(st.i), np.float32)
                 st.w = _isr_receive(st.w, st.U, b["v"], eta,
-                                    jnp.asarray(take))
+                                    _commit(take))
                 st.k[take] = b["k"]
         if due:
             self.bcasts.retire(t)
@@ -240,10 +317,10 @@ class CohortEngine:
         nmax = int(n.max())
         if nmax > 0:
             st.credit -= n << FRAC_BITS
-            eta = jnp.asarray(self._eta_of(st.i), jnp.float32)
+            eta = _commit(self._eta_of(st.i), np.float32)
             st.w, st.U = self.ctask.run_block(
-                st.w, st.U, jnp.asarray(st.i, jnp.int32),
-                jnp.asarray(st.h, jnp.int32), jnp.asarray(n, jnp.int32),
+                st.w, st.U, _commit(st.i, np.int32),
+                _commit(st.h, np.int32), _commit(n, np.int32),
                 eta, next_pow2(nmax))
             st.h += n
 
@@ -259,15 +336,19 @@ class CohortEngine:
         self.part[idx] += 1
         self.bytes_up[idx] += self._upd_bytes
         eta = self._eta_of(st.i)
-        done_dev = jnp.asarray(done)
-        wgt_all = jnp.asarray(eta * done, jnp.float32)
+        done_dev = _commit(done)
+        wgt_all = _commit(eta * done, np.float32)
 
         arrive = np.full(self.C, -1, np.int64)
         arrive[idx] = st.tick + self._update_ticks(idx, st.i)
         groups = np.unique(arrive[idx])
 
         if self.dp_sigma > 0.0 or self.dp_round_clip > 0.0:
-            key = jax.random.fold_in(self.noise_base, st.tick)
+            # commit the tick explicitly: steady segments run under
+            # jax.transfer_guard("disallow") and a bare Python int here
+            # would be an implicit host->device transfer
+            key = jax.random.fold_in(self.noise_base,
+                                     _commit(st.tick, np.int32))
             noised, agg = cohort_clip_noise(
                 st.U, key, wgt_all, done_dev,
                 clip=self.dp_round_clip,
@@ -277,7 +358,7 @@ class CohortEngine:
             # (sent − raw) so a later ŵ = v̂ − eta·U replacement stays
             # consistent with the noise the server absorbed.
             st.w = _add_scaled_rows(st.w, noised - st.U,
-                                    jnp.asarray(eta, jnp.float32), done_dev)
+                                    _commit(eta, np.float32), done_dev)
             sent = noised
         else:
             sent, agg = st.U, None
@@ -287,21 +368,33 @@ class CohortEngine:
         # delivery-time float add order matches (see UpdateBuckets)
         ring = (self._plan.ring_ticks if self._plan is not None
                 else None)
+        strat = self.strategy
+        # FedAsync buckets are stratified by sender k (mod R): the k each
+        # finishing client will stamp on its message is st.k, pinned here
+        # BEFORE the round advance below
+        kmod = (st.k & (self.R - 1)) if strat.stratified else None
         for g in groups:
             in_g = arrive == g
-            if agg is not None and len(groups) == 1:
-                vec = agg                       # fused kernel aggregate
-            else:
-                vec = _weighted_sum(sent, jnp.asarray(eta * in_g,
-                                                      jnp.float32))
             far = ring is not None and int(g) - st.tick >= ring
             members = np.flatnonzero(in_g)
             if far:
                 self.far_messages += len(members)
-            self.updates.add(int(g), vec,
-                             [(int(st.i[c]), int(c), int(st.k[c]))
-                              for c in members],
-                             far=far)
+            pairs_list = [(int(st.i[c]), int(c), int(st.k[c]))
+                          for c in members]
+            if strat.stratified:
+                cur = self.updates.get(int(g), far=far)
+                if cur is None:
+                    cur = self._strat_zero
+                cur = self._strat_insert(
+                    cur, sent, _commit(eta, np.float32),
+                    _commit(in_g), _commit(kmod, np.int32))
+                self.updates.put(int(g), cur, pairs_list, far=far)
+                continue
+            if agg is not None and len(groups) == 1:
+                vec = agg                       # fused kernel aggregate
+            else:
+                vec = _weighted_sum(sent, _commit(eta * in_g, np.float32))
+            self.updates.add(int(g), vec, pairs_list, far=far)
         # far-tier occupancy high-water mark == the device engine's peak
         # count of occupied overflow slots (one slot per pending far tick)
         self.ovf_hwm = max(self.ovf_hwm, len(self.updates.far_contrib))
@@ -336,6 +429,11 @@ class CohortEngine:
         timer = PhaseTimer()
         import time
         run_t0 = time.perf_counter()
+        # First segment runs unguarded (jit compiles may stage host
+        # constants); once warm, steady-segment ticks run under
+        # transfer_guard("disallow") like DeviceCohortEngine.run — any
+        # implicit host->device transfer inside a tick is a perf bug.
+        guarded = False
         while st.server_k < max_rounds:
             if st.tick >= max_ticks:
                 raise RuntimeError(
@@ -343,7 +441,11 @@ class CohortEngine:
                     f"server_k={st.server_k} < {max_rounds} "
                     f"(in flight: {len(self.updates)} updates, "
                     f"{len(self.bcasts.pending)} broadcasts)")
-            self.step()
+            if guarded:
+                with jax.transfer_guard("disallow"):
+                    self.step()
+            else:
+                self.step()
             if st.server_k >= next_eval:
                 m = evals(st.v)
                 m.update(round=st.server_k, time=st.tick * self.dt,
@@ -351,6 +453,7 @@ class CohortEngine:
                 self.history.append(m)
                 next_eval = st.server_k + eval_every
                 self._emit_segment()
+                guarded = True
         final = evals(st.v)
         final.update(round=st.server_k, time=st.tick * self.dt,
                      messages=self.total_messages,

@@ -28,7 +28,8 @@ class CohortSimulator:
                  latency_fn: Optional[Callable] = None, seed: int = 0,
                  block: int = 64, dp_round_clip: float = 0.0,
                  use_dp_kernel: bool = True, interpret: bool = True,
-                 scenario=None, trace=None, dp_delta: float = 1e-5):
+                 scenario=None, trace=None, dp_delta: float = 1e-5,
+                 strategy=None):
         self.task = task
         self.ctask = as_cohort_task(task, n_clients, seed=seed)
         # a pre-adapted cohort task keeps DP knobs on its wrapped task
@@ -41,7 +42,8 @@ class CohortSimulator:
             dp_clip=getattr(src_task, "dp_clip", 0.0),
             dp_round_clip=dp_round_clip,
             use_dp_kernel=use_dp_kernel, interpret=interpret,
-            scenario=scenario, trace=trace, dp_delta=dp_delta)
+            scenario=scenario, trace=trace, dp_delta=dp_delta,
+            strategy=strategy)
 
     @property
     def server_model(self):
@@ -73,7 +75,7 @@ class DeviceCohortSimulator:
                  latency=None, seed: int = 0, block: int = 64,
                  dp_round_clip: float = 0.0, use_dp_kernel: bool = True,
                  interpret: bool = True, scenario=None, trace=None,
-                 dp_delta: float = 1e-5):
+                 dp_delta: float = 1e-5, strategy=None):
         self.task = task
         self.ctask = as_cohort_task(task, n_clients, seed=seed)
         src_task = getattr(task, "task", task)
@@ -85,7 +87,8 @@ class DeviceCohortSimulator:
             dp_clip=getattr(src_task, "dp_clip", 0.0),
             dp_round_clip=dp_round_clip,
             use_dp_kernel=use_dp_kernel, interpret=interpret,
-            scenario=scenario, trace=trace, dp_delta=dp_delta)
+            scenario=scenario, trace=trace, dp_delta=dp_delta,
+            strategy=strategy)
 
     @property
     def server_model(self):
@@ -122,6 +125,8 @@ def make_simulator(engine, task, **kw):
             kw.setdefault("block", cfg.cohort_block)
         if getattr(cfg, "scenario", None) is not None:
             kw.setdefault("scenario", cfg.scenario)
+        if getattr(cfg, "aggregation", None) is not None:
+            kw.setdefault("strategy", cfg.aggregation)
     if engine == "cohort":
         return CohortSimulator(task, **kw)
     if engine == "device":

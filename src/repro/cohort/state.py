@@ -177,6 +177,18 @@ class DeviceCohortState(NamedTuple):
     ovf_ks: Any            # [Q, R] i32 overflow counts by sender k mod R
     ovf_hwm: Any           # []     i32 overflow occupancy high-water mark
     far_msgs: Any          # []     i32 updates routed to the far tier
+    # aggregation-strategy buffers (repro.core.strategies): sized [1,...]
+    # dummies under the default paper strategy, real buffers otherwise.
+    # ``upd_kvec``/``ovf_kvec`` are the sender-k STRATIFIED counterparts
+    # of ``upd_vec``/``ovf_vec`` — FedAsync must decay each arriving
+    # vector by its own staleness at apply time, so pre-summing across
+    # sender-k (the paper path) would lose the needed resolution.
+    # ``buf_vec``/``buf_cnt`` are FedBuff's accumulator and its arrival
+    # count since the last flush.
+    upd_kvec: Any          # [L, R, D] f32 arrival buckets by sender k
+    ovf_kvec: Any          # [Q, R, D] f32 overflow buckets by sender k
+    buf_vec: Any           # [D]       f32 FedBuff flush accumulator
+    buf_cnt: Any           # []        i32 updates buffered since flush
 
 
 @dataclass
@@ -205,6 +217,20 @@ class UpdateBuckets:
             bucket[tick] = bucket[tick] + vec
         else:
             bucket[tick] = vec
+        self.meta.setdefault(tick, []).extend(pairs)
+
+    def get(self, tick: int, far: bool = False):
+        """Current bucket payload at ``tick`` (None when empty) — the
+        read half of the get-modify-``put`` cycle the stratified
+        (sender-k bucketed) strategies use: their [R, D] buckets must be
+        merged row-by-row with the device engine's exact masked-add
+        expression, not with the opaque ``add`` merge."""
+        return (self.far_contrib if far else self.contrib).get(tick)
+
+    def put(self, tick: int, vec, pairs: List[Tuple[int, int, int]],
+            far: bool = False) -> None:
+        """Overwrite the bucket payload at ``tick`` and append pairs."""
+        (self.far_contrib if far else self.contrib)[tick] = vec
         self.meta.setdefault(tick, []).extend(pairs)
 
     def pop(self, tick: int):

@@ -280,6 +280,12 @@ class FLConfig:
     #                               latency tables, regional/renewal
     #                               churn, ring_cap); None keeps each
     #                               engine's legacy default network
+    aggregation: Optional[Any] = None  # repro.core.strategies spec:
+    #                               None keeps the paper's apply-on-
+    #                               dequeue server; "fedasync"/"fedbuff"
+    #                               (or a strategy instance / {"kind":
+    #                               ...} dict) select the zoo, accepted
+    #                               by all three engines
 
 
 @dataclass(frozen=True)

@@ -10,6 +10,9 @@ from repro.core.sequences import (communication_rounds_vs_constant,
 from repro.core.simulator import AsyncFLSimulator, run_sync_baseline
 from repro.core.stepsizes import (eta_t, per_iteration_stepsizes,
                                   round_stepsizes, theorem5_round_stepsizes)
+from repro.core.strategies import (AggregationStrategy, FedAsyncStrategy,
+                                   FedBuffStrategy, PaperStrategy,
+                                   get_strategy)
 from repro.core.tasks import BatchModelTask, LogRegTask
 
 __all__ = [
@@ -21,5 +24,7 @@ __all__ = [
     "AsyncFLSimulator", "run_sync_baseline",
     "eta_t", "per_iteration_stepsizes", "round_stepsizes",
     "theorem5_round_stepsizes",
+    "AggregationStrategy", "FedAsyncStrategy", "FedBuffStrategy",
+    "PaperStrategy", "get_strategy",
     "BatchModelTask", "LogRegTask",
 ]

@@ -29,24 +29,31 @@ class Aggregator:
     def __init__(self, agg_id: int, child_ids: Sequence[int]):
         self.id = agg_id
         self.children = set(child_ids)
-        self.pending: Dict[int, Dict[int, Any]] = {}   # round -> {c: U}
+        # round -> {c: (U, k_send)}
+        self.pending: Dict[int, Dict[int, Any]] = {}
         self.forwarded: List[int] = []
 
     def receive(self, msg: UpdateMsg) -> Optional[UpdateMsg]:
         assert msg.client_id in self.children, \
             f"client {msg.client_id} not assigned to aggregator {self.id}"
         bucket = self.pending.setdefault(msg.round_idx, {})
-        bucket[msg.client_id] = msg.U
+        bucket[msg.client_id] = (msg.U, msg.k_send)
         if set(bucket) == self.children:
             total = None
-            for U in bucket.values():
+            for U, _ks in bucket.values():
                 total = U if total is None else jax.tree_util.tree_map(
                     jnp.add, total, U)
+            # forward the bucket's MINIMUM k_send — the conservative
+            # (largest) staleness of any summed child update, so the
+            # staleness-at-apply census never under-reports an
+            # aggregator-tree run (k_send previously defaulted to 0,
+            # i.e. garbage tau = server_k for every aggregate)
+            k_send = min(ks for _U, ks in bucket.values())
             del self.pending[msg.round_idx]
             self.forwarded.append(msg.round_idx)
             # encode the aggregate as a synthetic "client" = aggregator id
             return UpdateMsg(round_idx=msg.round_idx,
-                             client_id=self.id, U=total)
+                             client_id=self.id, U=total, k_send=k_send)
         return None
 
 

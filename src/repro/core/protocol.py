@@ -16,14 +16,23 @@ Faithfulness notes:
   current-round updates).
 * Wait gate (Supp. B.2): the τ(t_glob) ≤ t_delay loop is replaced by the
   equivalent gate "block while i == k + d" once condition (3) holds.
+
+The server's *application rule* — and only that — is pluggable: an
+``AggregationStrategy`` (``repro.core.strategies``) selects the paper's
+apply-on-dequeue default, FedAsync staleness-decayed mixing, or FedBuff
+buffered aggregation.  H bookkeeping, the broadcast cascade, and the
+wait gate are strategy-invariant, so every strategy sees the same
+message schedule under a given seed.
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, List, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
+
+from repro.core.strategies import get_strategy
 
 
 @dataclass
@@ -45,13 +54,17 @@ class BroadcastMsg:
 # ---------------------------------------------------------------------------
 
 class Server:
-    def __init__(self, v0, n_clients: int, round_stepsizes: Sequence[float]):
+    def __init__(self, v0, n_clients: int, round_stepsizes: Sequence[float],
+                 strategy=None):
         self.v = v0
         self.n_clients = n_clients
         self.eta_bar = list(round_stepsizes)
         self.k = 0
         self.H: set = set()
         self.processed: List[Tuple[int, int]] = []   # audit log
+        self.strategy = get_strategy(strategy)
+        self._buf: Optional[Any] = None    # FedBuff accumulator pytree
+        self._buf_n = 0                    # updates buffered since flush
 
     def eta(self, i: int) -> float:
         return self.eta_bar[min(i, len(self.eta_bar) - 1)]
@@ -68,8 +81,27 @@ class Server:
         every client blocked on the wait gate (Supp. B.2).
         """
         eta = self.eta(msg.round_idx)
-        self.v = jax.tree_util.tree_map(
-            lambda v, u: v - eta * u, self.v, msg.U)
+        strat = self.strategy
+        if strat.buffered:
+            # FedBuff: bank eta-weighted updates, flush every B arrivals
+            contrib = jax.tree_util.tree_map(lambda u: eta * u, msg.U)
+            self._buf = contrib if self._buf is None \
+                else jax.tree_util.tree_map(
+                    lambda b, c: b + c, self._buf, contrib)
+            self._buf_n += 1
+            if self._buf_n >= strat.buffer_size:
+                self.v = jax.tree_util.tree_map(
+                    lambda v, b: v - b, self.v, self._buf)
+                self._buf, self._buf_n = None, 0
+        elif strat.stratified:
+            # FedAsync: staleness-decayed mixing against the pre-cascade k
+            scale = eta * strat.weight(self.k - msg.k_send)
+            self.v = jax.tree_util.tree_map(
+                lambda v, u: v - scale * u, self.v, msg.U)
+        else:
+            # paper Algorithm 3: apply on dequeue, weight 1
+            self.v = jax.tree_util.tree_map(
+                lambda v, u: v - eta * u, self.v, msg.U)
         self.H.add((msg.round_idx, msg.client_id))
         self.processed.append((msg.round_idx, msg.client_id))
         fired: List[BroadcastMsg] = []

@@ -62,7 +62,8 @@ class AsyncFLSimulator:
                  = None,
                  seed: int = 0, record_invariant: bool = False,
                  global_sizes: Optional[Sequence[int]] = None,
-                 scenario=None, trace=None, dp_delta: float = 1e-5):
+                 scenario=None, trace=None, dp_delta: float = 1e-5,
+                 strategy=None):
         self.task = task
         self.n = n_clients
         self.rng = np.random.default_rng(seed)
@@ -85,7 +86,8 @@ class AsyncFLSimulator:
         self.global_sizes = global_sizes
 
         w0 = task.init_model()
-        self.server = Server(w0, n_clients, round_stepsizes)
+        self.server = Server(w0, n_clients, round_stepsizes,
+                             strategy=strategy)
         if isinstance(sizes_per_client[0], (list, tuple)):
             per_client = sizes_per_client
         else:

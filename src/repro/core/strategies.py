@@ -1,0 +1,179 @@
+"""Pluggable server-side aggregation strategies — the async-aggregation
+zoo (ROADMAP: "an async-aggregation zoo under one protocol interface").
+
+The paper's server (Algorithm 3) applies every arriving update on
+dequeue and gates clients behind the round-completion wait gate.  The
+async-FL literature defines a family around that point in design space:
+
+  * ``PaperStrategy`` (default) — apply-on-dequeue, weight 1.  Keeps the
+    repo's golden trajectories and three-way parity bit-exact.
+  * ``FedAsyncStrategy`` — staleness-decayed alpha-mixing (Xie et al.,
+    FedAsync; the FLGo ``fedasync`` server): an update sent against
+    broadcast counter ``k_send`` and applied at server counter ``k`` is
+    weighted ``alpha * s(tau)`` with ``tau = k - k_send`` and ``s`` one
+    of ``constant`` / ``hinge`` / ``poly``.
+  * ``FedBuffStrategy`` — buffered aggregation (Nguyen et al., FedBuff):
+    arriving updates accumulate in a server-side buffer applied to the
+    model only every ``buffer_size`` updates.
+
+Everything EXCEPT the application of arriving update vectors to the
+server model is strategy-invariant: the H-set bookkeeping, the
+broadcast cascade, the wait gate, latency draws, availability, and the
+telemetry census are identical across strategies, so a zoo run across
+strategies under one seed sees the exact same message schedule — the
+convergence differences in ``BENCH_cohort.json``'s aggregation-zoo grid
+are attributable to the aggregation rule alone.
+
+Engine contract (the reason this module is jit-compatible):
+
+  * ``weight(tau)`` is the Python-float path the event simulator uses
+    per message.
+  * ``decay_weights(tau)`` is the jnp path: a ``[R]`` traced-int32
+    staleness vector (one entry per sender-k ring slot) mapped to
+    ``[R]`` float32 weights.  The host and device cohort engines
+    evaluate the SAME expression on the same operands, which is what
+    keeps host-vs-device bitwise parity on every strategy.
+  * ``fingerprint()`` keys the device engine's compiled-segment cache.
+
+Strategy hyperparameters are Python constants baked into the jitted
+segment at trace time; the mutable strategy *buffers* (the sender-k
+stratified rings, the FedBuff accumulator) are ``DeviceCohortState``
+fields, covered by ``repro.sharding.cohort_pspecs`` and enforced by the
+STRUCT-* analysis pass.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax.numpy as jnp
+
+
+class AggregationStrategy:
+    """Base class AND the paper's default apply-on-dequeue rule."""
+
+    #: strategy id, used in fingerprints / benchmark rows
+    kind: str = "paper"
+    #: engines bucket update vectors per sender-k and decay at apply time
+    stratified: bool = False
+    #: engines accumulate applied vectors and flush every buffer_size
+    buffered: bool = False
+
+    def weight(self, tau: int) -> float:
+        """Decay weight for one update applied at staleness ``tau``
+        (event-simulator path, Python floats)."""
+        return 1.0
+
+    def decay_weights(self, tau):
+        """[R] traced int32 staleness -> [R] f32 weights (cohort-engine
+        path).  Host and device evaluate this same expression — parity."""
+        return jnp.ones(tau.shape, jnp.float32)
+
+    def fingerprint(self) -> Tuple[Any, ...]:
+        """Hashable identity for the compiled-segment cache."""
+        return (self.kind,)
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}{self.fingerprint()[1:]}"
+
+
+PaperStrategy = AggregationStrategy
+
+#: FedAsync decay families (FLGo's fedasync server option vocabulary)
+FEDASYNC_DECAYS = ("constant", "hinge", "poly")
+
+
+@dataclass(frozen=True, repr=False)
+class FedAsyncStrategy(AggregationStrategy):
+    """Staleness-decayed alpha-mixing: apply ``alpha * s(tau) * eta * U``.
+
+    ``s(tau)`` per ``decay`` (FLGo defaults):
+      constant  s = 1
+      hinge     s = 1 if tau <= hinge_b else 1 / (hinge_a*(tau-hinge_b)+1)
+      poly      s = (tau + 1) ** -poly_a
+    """
+    alpha: float = 0.6
+    decay: str = "poly"
+    hinge_a: float = 10.0
+    hinge_b: int = 6
+    poly_a: float = 0.5
+
+    kind = "fedasync"
+    stratified = True
+
+    def __post_init__(self):
+        if self.decay not in FEDASYNC_DECAYS:
+            raise ValueError(f"FedAsync decay {self.decay!r} not in "
+                             f"{FEDASYNC_DECAYS}")
+
+    def weight(self, tau: int) -> float:
+        t = float(max(tau, 0))
+        if self.decay == "constant":
+            s = 1.0
+        elif self.decay == "hinge":
+            s = (1.0 if t <= self.hinge_b
+                 else 1.0 / (self.hinge_a * (t - self.hinge_b) + 1.0))
+        else:
+            s = (t + 1.0) ** (-self.poly_a)
+        return self.alpha * s
+
+    def decay_weights(self, tau):
+        tf = tau.astype(jnp.float32)
+        alpha = jnp.float32(self.alpha)
+        if self.decay == "constant":
+            return jnp.full(tau.shape, alpha, jnp.float32)
+        if self.decay == "hinge":
+            a = jnp.float32(self.hinge_a)
+            b = jnp.float32(self.hinge_b)
+            return jnp.where(tf <= b, alpha,
+                             alpha / (a * (tf - b) + 1.0))
+        return alpha * jnp.power(tf + 1.0, -jnp.float32(self.poly_a))
+
+    def fingerprint(self) -> Tuple[Any, ...]:
+        return ("fedasync", self.alpha, self.decay, self.hinge_a,
+                self.hinge_b, self.poly_a)
+
+
+@dataclass(frozen=True, repr=False)
+class FedBuffStrategy(AggregationStrategy):
+    """Buffered aggregation: ``v -= buffer`` every ``buffer_size``
+    arriving updates (instead of on every dequeue).  A partial buffer at
+    run end is dropped, as in FedBuff."""
+    buffer_size: int = 4
+
+    kind = "fedbuff"
+    buffered = True
+
+    def __post_init__(self):
+        if self.buffer_size < 1:
+            raise ValueError("FedBuff buffer_size must be >= 1")
+
+    def fingerprint(self) -> Tuple[Any, ...]:
+        return ("fedbuff", self.buffer_size)
+
+
+_BY_KIND = {"paper": PaperStrategy, "fedasync": FedAsyncStrategy,
+            "fedbuff": FedBuffStrategy}
+
+
+def get_strategy(spec=None) -> AggregationStrategy:
+    """Resolve ``None`` | kind name | ``{"kind": ..., **hparams}`` |
+    strategy instance to an ``AggregationStrategy``."""
+    if spec is None:
+        return PaperStrategy()
+    if isinstance(spec, AggregationStrategy):
+        return spec
+    if isinstance(spec, str):
+        kind, spec = spec, {}
+    elif isinstance(spec, dict):
+        spec = dict(spec)
+        kind = spec.pop("kind", "paper")
+    else:
+        raise TypeError(f"cannot resolve aggregation strategy from "
+                        f"{spec!r} (want None, a kind name, a dict, or "
+                        f"an AggregationStrategy)")
+    cls = _BY_KIND.get(kind)
+    if cls is None:
+        raise ValueError(f"unknown aggregation strategy {kind!r} "
+                         f"(want one of {sorted(_BY_KIND)})")
+    return cls(**spec)

@@ -293,18 +293,26 @@ class ScenarioPlan:
     def host_update_ticks(self, i: np.ndarray) -> np.ndarray:
         if self._ticks_const:
             return self._tick0_c.copy()
-        return np.asarray(self._host_upd(jnp.asarray(i, jnp.int32)),
-                          np.int64)
+        # device_put of a pre-converted array: an int64->int32
+        # jnp.asarray is an IMPLICIT transfer and raises inside the
+        # host engine's transfer-guarded steady segments
+        return np.asarray(
+            self._host_upd(jax.device_put(np.asarray(i, np.int32))),
+            np.int64)
 
     def host_broadcast_ticks(self, k: int) -> np.ndarray:
         if self._ticks_const:
             return self._tick0_c.copy()
-        return np.asarray(self._host_bc(jnp.int32(k)), np.int64)
+        # device_put, not jnp.int32: the host engine calls this inside
+        # its transfer-guarded steady segments, where only EXPLICIT
+        # host->device transfers are allowed
+        return np.asarray(self._host_bc(jax.device_put(np.int32(k))),
+                          np.int64)
 
     def host_avail(self, t: int) -> Optional[np.ndarray]:
         if self._host_avail is None:
             return None
-        return np.asarray(self._host_avail(jnp.int32(t)))
+        return np.asarray(self._host_avail(jax.device_put(np.int32(t))))
 
     # -- continuous-seconds draws (event simulator) ------------------------
     def update_latencies_s(self, i: int) -> np.ndarray:

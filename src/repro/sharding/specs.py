@@ -151,6 +151,12 @@ def cohort_pspecs(mesh: Mesh, n_clients: int) -> Dict[str, P]:
         "part": P(c_ax), "bytes_up": P(c_ax),
         "stale_hist": P(None), "upd_ks": P(None, None),
         "ovf_ks": P(None, None), "ovf_hwm": P(), "far_msgs": P(),
+        # aggregation-strategy buffers (repro.core.strategies): server-
+        # side ring payloads and the FedBuff accumulator replicate like
+        # the message rings they extend ([1, ...] dummies under the
+        # default paper strategy)
+        "upd_kvec": P(None, None, None), "ovf_kvec": P(None, None, None),
+        "buf_vec": P(None), "buf_cnt": P(),
     }
 
 

@@ -50,6 +50,22 @@ def test_tree_equivalent_to_flat_server():
     assert flat.k == tree_srv.k == 1
 
 
+def test_aggregator_forwards_min_k_send():
+    """Regression: the summed upstream message must carry the bucket's
+    MINIMUM k_send (the conservative, i.e. largest, staleness of any
+    summed child update).  It previously fell through to the dataclass
+    default 0, so the staleness-at-apply census read tau = server_k for
+    every aggregator-tree message."""
+    agg = Aggregator(0, [0, 1, 2])
+    U = lambda v: {"w": jnp.asarray([float(v)])}  # noqa: E731
+    assert agg.receive(UpdateMsg(3, 0, U(1), k_send=7)) is None
+    assert agg.receive(UpdateMsg(3, 1, U(2), k_send=5)) is None
+    out = agg.receive(UpdateMsg(3, 2, U(3), k_send=6))
+    assert out is not None
+    assert out.k_send == 5
+    np.testing.assert_allclose(np.asarray(out.U["w"]), 6.0)
+
+
 def test_message_accounting():
     mc = tree_message_counts(n_clients=100, fan_in=10, T=195)
     assert mc["aggregator_to_server"] == 10 * 195

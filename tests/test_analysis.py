@@ -13,7 +13,7 @@ import pytest
 from repro.analysis import NOISE_SALT, REGISTRY
 from repro.analysis.base import (Violation, apply_baseline, iter_py_files,
                                  load_baseline, module_name)
-from repro.analysis import prng, purity, salts, structure
+from repro.analysis import foldin, prng, purity, salts, structure
 from repro.analysis.runner import main, run_analysis
 from repro.cohort import CohortSimulator, DeviceCohortSimulator
 from repro.core import LogRegTask
@@ -159,6 +159,97 @@ def test_prng_unsalted_roots_not_audited():
             return a, b
     """))
     assert found == []
+
+
+# --- fold_in chain discipline -------------------------------------------------
+
+def test_foldin_duplicate_constant_fires():
+    found = foldin.check_file("fake/mod.py", _src("""
+        import jax
+        def keys(seed):
+            base = jax.random.PRNGKey(seed ^ LAT_SALT)
+            upd = jax.random.fold_in(base, 0)
+            bc = jax.random.fold_in(base, 0)
+            return upd, bc
+    """))
+    assert _rules(found) == ["PRNG-FOLDIN-DUP"]
+    assert "LAT_SALT" in found[0].message
+
+
+def test_foldin_const_variable_mix_fires():
+    found = foldin.check_file("fake/mod.py", _src("""
+        import jax
+        def keys(seed, t):
+            base = jax.random.PRNGKey(seed ^ LAT_SALT)
+            upd = jax.random.fold_in(base, 0)
+            return jax.random.fold_in(base, t)
+    """))
+    assert _rules(found) == ["PRNG-FOLDIN-MIXED"]
+
+
+def test_foldin_conflicting_variable_addresses_fire():
+    """Two different runtime domains folded at the same chain position
+    can collide (tick == client aliases the noise streams)."""
+    found = foldin.check_file("fake/mod.py", _src("""
+        import jax
+        def keys(seed, tick, client):
+            base = jax.random.PRNGKey(seed ^ NOISE_SALT)
+            k1 = jax.random.fold_in(base, tick)
+            k2 = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+                base, client)
+            return k1, k2
+    """))
+    assert _rules(found) == ["PRNG-FOLDIN-VAR"]
+    assert "tick" in found[0].message and "client" in found[0].message
+
+
+def test_foldin_parity_twins_and_const_branches_pass():
+    """The repo's legitimate shapes: distinct constant branches, then
+    IDENTICAL variable folds repeated across eager/jit twins."""
+    found = foldin.check_file("fake/mod.py", _src("""
+        import jax
+        def keys(seed, k, cidx):
+            base = jax.random.PRNGKey(seed ^ LAT_SALT)
+            upd = jax.random.fold_in(base, 0)
+            bc = jax.random.fold_in(base, 1)
+            bk_eager = jax.random.fold_in(bc, k)
+            bk_jit = jax.random.fold_in(bc, k)
+            return jax.vmap(jax.random.fold_in,
+                            in_axes=(None, 0))(upd, cidx)
+    """))
+    assert found == []
+
+
+def test_foldin_chains_are_scoped_per_toplevel_unit():
+    """The same salt may root differently-addressed chains in different
+    classes (AVAIL_SALT: ``t // epoch`` in Churn, epoch in Renewal)."""
+    found = foldin.check_file("fake/mod.py", _src("""
+        import jax
+        def markov(seed, t):
+            base = jax.random.PRNGKey(seed ^ AVAIL_SALT)
+            return jax.random.fold_in(base, t // 8)
+        def renewal(seed, e):
+            base = jax.random.PRNGKey(seed ^ AVAIL_SALT)
+            return jax.random.fold_in(base, e)
+    """))
+    assert found == []
+
+
+def test_foldin_unsalted_roots_not_audited():
+    found = foldin.check_file("fake/mod.py", _src("""
+        import jax
+        def keys(seed, tick, client):
+            base = jax.random.PRNGKey(seed)
+            return (jax.random.fold_in(base, tick),
+                    jax.random.fold_in(base, client))
+    """))
+    assert found == []
+
+
+def test_foldin_repo_is_clean():
+    files = iter_py_files(["src/repro"])
+    assert files, "expected repo sources"
+    assert foldin.check_files(files) == []
 
 
 # --- traced-code purity -------------------------------------------------------

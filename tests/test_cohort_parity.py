@@ -226,6 +226,29 @@ def test_cohort_dp_kernel_passthrough_and_agg_semantics():
         np.asarray(jnp.sum(out * wgt[:, None], axis=0)), atol=1e-5)
 
 
+def test_host_engine_steady_segments_reject_hidden_transfers():
+    """Regression: CohortEngine.run wraps warm (post-first-eval) ticks
+    in jax.transfer_guard("disallow"), like DeviceCohortEngine.run.  A
+    scenario wrapper that implicitly stages a host scalar per broadcast
+    — the exact bug host_broadcast_ticks used to have — must raise
+    instead of silently serializing every cascade on a transfer."""
+    X, y = make_binary_dataset(200, 10, seed=7, noise=0.3)
+    task = LogRegTask(X, y, l2=1.0 / len(X), sample_seed=11)
+    sim = CohortSimulator(
+        task, n_clients=5, sizes_per_client=[4, 6, 8],
+        round_stepsizes=[0.1, 0.08, 0.06], d=2, seed=3, block=4,
+        speeds=[1.0, 0.6, 1.4, 0.8, 1.1], scenario="geo_regional")
+    eng = sim.engine
+    plan = eng._plan
+    # the guard only bites on the traced-draw path — constant-latency
+    # plans short-circuit before touching the device
+    assert not plan._ticks_const
+    eng._bcast_ticks = lambda k: np.asarray(   # pre-fix implicit form
+        plan._host_bc(jnp.int32(k)), np.int64)
+    with pytest.raises(Exception, match="[Tt]ransfer"):
+        sim.run(max_rounds=4)
+
+
 def test_as_cohort_task_rejects_unknown():
     with pytest.raises(TypeError):
         as_cohort_task(object(), 4)

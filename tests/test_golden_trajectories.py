@@ -6,36 +6,65 @@ reordered reduction, a key-chain edit).  These tests pin ABSOLUTE
 eval-loss trajectories of the device engine on the named presets
 against committed JSON fixtures (tests/golden/), with tight tolerances.
 
-When a trajectory moves on purpose, regenerate and commit the fixture:
+Each run also exports its JSONL telemetry trace and model-checks it
+with ``repro.analysis.invariants`` (the INV-* rule family), so every
+golden trajectory — including the FedAsync and FedBuff aggregation
+strategies — is replayed against the protocol invariants in CI; the
+traces written at regen time are committed under tests/golden/traces/
+and replayed as frozen fixtures too.
+
+When a trajectory moves on purpose, regenerate and commit the fixtures:
 
     PYTHONPATH=src python -m pytest tests/test_golden_trajectories.py \
         --regen-golden
 """
+import glob
 import json
 import os
 
 import numpy as np
 import pytest
 
+from repro.analysis.invariants import check_trace
 from repro.cohort import DeviceCohortSimulator
 from repro.core import LogRegTask
 from repro.data import make_binary_dataset
 
-GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
-                           "golden_trajectories.json")
-PRESETS = ["uniform", "mobile_diurnal", "iot_straggler"]
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+GOLDEN_PATH = os.path.join(GOLDEN_DIR, "golden_trajectories.json")
+TRACE_DIR = os.path.join(GOLDEN_DIR, "traces")
+D_GATE = 2
+# aggregation-strategy specs by fixture tag; the default strategy keeps
+# the original preset-keyed fixture entries byte-identical
+STRATEGIES = {
+    "paper": None,
+    "fedasync": "fedasync",
+    "fedbuff": {"kind": "fedbuff", "buffer_size": 3},
+}
+#: (scenario preset, strategy tag) -> fixture key
+CASES = [
+    ("uniform", "paper"),
+    ("mobile_diurnal", "paper"),
+    ("iot_straggler", "paper"),
+    ("mobile_diurnal", "fedasync"),
+    ("iot_straggler", "fedbuff"),
+]
 # Tight but not bitwise: trajectories are f32 on-device reductions, and
 # the fixtures must survive BLAS/XLA build differences across machines.
 RTOL, ATOL = 1e-5, 1e-7
 
 
-def _run_preset(name):
+def _key(name, strategy):
+    return name if strategy == "paper" else f"{name}+{strategy}"
+
+
+def _run_preset(name, strategy="paper", trace=None):
     X, y = make_binary_dataset(300, 12, seed=9, noise=0.3)
     task = LogRegTask(X, y, l2=1.0 / 300, sample_seed=21)
     sim = DeviceCohortSimulator(
         task, n_clients=6, sizes_per_client=[4, 6, 8],
-        round_stepsizes=[0.1, 0.08, 0.06], d=2, seed=2, block=4,
-        scenario=name)
+        round_stepsizes=[0.1, 0.08, 0.06], d=D_GATE, seed=2, block=4,
+        scenario=name, strategy=STRATEGIES[strategy], trace=trace)
     res = sim.run(max_rounds=3, eval_every=1)
     tel = res["telemetry"]
     return {
@@ -60,19 +89,30 @@ def _load_golden():
         return json.load(f)
 
 
-@pytest.mark.parametrize("name", PRESETS)
-def test_golden_trajectory(name, regen_golden):
-    got = _run_preset(name)
+@pytest.mark.parametrize("name,strategy", CASES,
+                         ids=[_key(n, s) for n, s in CASES])
+def test_golden_trajectory(name, strategy, regen_golden, tmp_path):
+    key = _key(name, strategy)
+    if regen_golden:
+        os.makedirs(TRACE_DIR, exist_ok=True)
+        trace = os.path.join(TRACE_DIR, f"{key}.jsonl")
+    else:
+        trace = str(tmp_path / f"{key}.jsonl")
+    got = _run_preset(name, strategy, trace=trace)
+    # the exported trace must model-check clean on every golden run —
+    # the INV-* replay that pins wait-gate/census behavior of the
+    # aggregation strategies, not just their loss trajectories
+    assert check_trace(trace, d=D_GATE) == []
     if regen_golden:
         golden = _load_golden() if os.path.exists(GOLDEN_PATH) else {}
-        golden[name] = got
+        golden[key] = got
         os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
         with open(GOLDEN_PATH, "w") as f:
             json.dump(golden, f, indent=2, sort_keys=True)
-        pytest.skip(f"regenerated golden fixture for {name!r}")
+        pytest.skip(f"regenerated golden fixture for {key!r}")
     assert os.path.exists(GOLDEN_PATH), (
         "no golden fixtures committed; run with --regen-golden")
-    want = _load_golden()[name]
+    want = _load_golden()[key]
     # protocol and telemetry counts are integers: exact
     for k in ("rounds", "messages", "broadcasts", "participation",
               "bytes_up_total", "staleness_hist", "overflow_hwm",
@@ -84,8 +124,21 @@ def test_golden_trajectory(name, regen_golden):
                                rtol=RTOL, atol=ATOL)
 
 
-def test_golden_fixture_covers_all_presets():
-    """The committed fixture must not silently drop a preset."""
+def test_golden_fixture_covers_all_cases():
+    """The committed fixture must not silently drop a case."""
     if not os.path.exists(GOLDEN_PATH):
         pytest.skip("fixtures not generated yet")
-    assert set(PRESETS) <= set(_load_golden())
+    assert {_key(n, s) for n, s in CASES} <= set(_load_golden())
+
+
+def test_committed_traces_replay_clean():
+    """Frozen-trace replay: the committed regen-time traces stay clean
+    under the CURRENT invariant checker, independent of today's engine
+    output — a checker regression or a fixture edit both trip this."""
+    traces = sorted(glob.glob(os.path.join(TRACE_DIR, "*.jsonl")))
+    if not traces:
+        pytest.skip("trace fixtures not generated yet")
+    assert {os.path.splitext(os.path.basename(t))[0] for t in traces} \
+        >= {_key(n, s) for n, s in CASES}
+    for t in traces:
+        assert check_trace(t, d=D_GATE) == [], t

@@ -1,0 +1,181 @@
+"""The async-aggregation zoo: strategy resolution, decay math, the
+strategy-invariant message schedule, and host-vs-device bit parity for
+every zoo member (incl. DP and stochastic scenario presets)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cohort import CohortSimulator, DeviceCohortSimulator
+from repro.configs.base import FLConfig
+from repro.cohort.simulator import make_simulator
+from repro.core import (AsyncFLSimulator, FedAsyncStrategy,
+                        FedBuffStrategy, LogRegTask, PaperStrategy,
+                        get_strategy)
+from repro.data import make_binary_dataset
+
+
+# --- resolution ---------------------------------------------------------------
+
+def test_get_strategy_resolution():
+    assert isinstance(get_strategy(None), PaperStrategy)
+    assert get_strategy(None).kind == "paper"
+    assert isinstance(get_strategy("fedasync"), FedAsyncStrategy)
+    s = get_strategy({"kind": "fedbuff", "buffer_size": 7})
+    assert isinstance(s, FedBuffStrategy) and s.buffer_size == 7
+    inst = FedAsyncStrategy(alpha=0.3, decay="hinge")
+    assert get_strategy(inst) is inst
+    with pytest.raises(ValueError):
+        get_strategy("fedmystery")
+    with pytest.raises(TypeError):
+        get_strategy(42)
+    with pytest.raises(ValueError):
+        FedAsyncStrategy(decay="exponential")
+    with pytest.raises(ValueError):
+        FedBuffStrategy(buffer_size=0)
+
+
+def test_fingerprints_distinguish_hyperparameters():
+    """The device engine keys its compiled-segment cache on these."""
+    fps = {get_strategy(s).fingerprint() for s in (
+        None, "fedasync", {"kind": "fedasync", "alpha": 0.3},
+        {"kind": "fedasync", "decay": "hinge"}, "fedbuff",
+        {"kind": "fedbuff", "buffer_size": 2})}
+    assert len(fps) == 6
+
+
+# --- decay math ---------------------------------------------------------------
+
+@pytest.mark.parametrize("decay", ["constant", "hinge", "poly"])
+def test_fedasync_decay_weights_match_scalar_weight(decay):
+    """The jnp [R] path (cohort engines) and the Python-float path
+    (event simulator) are the same function of tau."""
+    strat = FedAsyncStrategy(decay=decay, hinge_b=2)
+    tau = jnp.arange(8, dtype=jnp.int32)
+    vec = np.asarray(strat.decay_weights(tau))
+    ref = np.asarray([strat.weight(t) for t in range(8)], np.float32)
+    np.testing.assert_allclose(vec, ref, rtol=1e-6)
+    assert vec.dtype == np.float32
+
+
+def test_fedasync_decay_monotone_in_staleness():
+    for decay in ("hinge", "poly"):
+        strat = FedAsyncStrategy(decay=decay, hinge_b=1)
+        w = [strat.weight(t) for t in range(6)]
+        assert all(a >= b for a, b in zip(w, w[1:]))
+        assert w[0] == pytest.approx(strat.alpha)
+
+
+# --- engine behavior ----------------------------------------------------------
+
+def _task(**kw):
+    X, y = make_binary_dataset(300, 12, seed=9, noise=0.3)
+    return LogRegTask(X, y, l2=1.0 / 300, sample_seed=21, **kw)
+
+
+_KW = dict(n_clients=5, sizes_per_client=[4, 6, 8],
+           round_stepsizes=[0.1, 0.08, 0.06], d=2, seed=3, block=4,
+           speeds=[1.0, 0.6, 1.4, 0.8, 1.1])
+
+ZOO = [None, "fedasync", {"kind": "fedasync", "decay": "hinge"},
+       {"kind": "fedasync", "decay": "constant"},
+       {"kind": "fedbuff", "buffer_size": 3}]
+_IDS = ["paper", "fedasync-poly", "fedasync-hinge", "fedasync-const",
+        "fedbuff3"]
+
+
+def test_event_sim_strategies_share_message_schedule():
+    """Everything except the v-application is strategy-invariant: under
+    one seed the zoo sees the exact same message/broadcast schedule,
+    and the strategies differ only in the model they produce."""
+    finals, models = [], []
+    for spec in (None, "fedasync", {"kind": "fedbuff", "buffer_size": 3}):
+        res = AsyncFLSimulator(
+            _task(), n_clients=4, sizes_per_client=[4, 6, 8],
+            round_stepsizes=[0.1, 0.08, 0.06], d=2, seed=3,
+            speeds=[1.0, 0.8, 1.2, 0.9],
+            strategy=spec).run(max_rounds=3)
+        finals.append((res["final"]["round"], res["final"]["messages"],
+                       res["final"]["broadcasts"]))
+        models.append(np.asarray(res["model"]["w"]))
+    assert finals[0] == finals[1] == finals[2]
+    assert not np.array_equal(models[0], models[1])
+    assert not np.array_equal(models[0], models[2])
+
+
+@pytest.mark.parametrize("spec", ZOO, ids=_IDS)
+def test_zoo_host_vs_device_bitwise(spec):
+    """Every zoo member holds the repo's flagship contract: the host
+    cohort loop and the device-resident loop produce bit-identical
+    models (same jnp expressions on the same operands)."""
+    res_co = CohortSimulator(_task(), strategy=spec,
+                             **_KW).run(max_rounds=3)
+    res_dv = DeviceCohortSimulator(_task(), strategy=spec,
+                                   **_KW).run(max_rounds=3)
+    np.testing.assert_array_equal(np.asarray(res_co["model"]["w"]),
+                                  np.asarray(res_dv["model"]["w"]))
+    assert float(res_co["model"]["b"]) == float(res_dv["model"]["b"])
+    assert res_co["final"]["messages"] == res_dv["final"]["messages"]
+    assert res_co["final"]["broadcasts"] == res_dv["final"]["broadcasts"]
+
+
+@pytest.mark.parametrize("spec,scenario", [
+    ("fedasync", "mobile_diurnal"),
+    ({"kind": "fedbuff", "buffer_size": 3}, "iot_straggler"),
+], ids=["fedasync+dp+diurnal", "fedbuff+dp+straggler"])
+def test_zoo_bitwise_parity_with_dp_and_stochastic_preset(spec, scenario):
+    """DP noise (fused kernel), round clip, and a stochastic scenario
+    preset preserve host<->device bit parity on the new strategies."""
+    kw = dict(_KW, dp_round_clip=0.5, scenario=scenario)
+    task_kw = dict(dp_clip=0.1, dp_sigma=2.0)
+    res_co = CohortSimulator(_task(**task_kw), strategy=spec,
+                             **kw).run(max_rounds=3)
+    res_dv = DeviceCohortSimulator(_task(**task_kw), strategy=spec,
+                                   **kw).run(max_rounds=3)
+    np.testing.assert_array_equal(np.asarray(res_co["model"]["w"]),
+                                  np.asarray(res_dv["model"]["w"]))
+    assert float(res_co["model"]["b"]) == float(res_dv["model"]["b"])
+    assert res_co["final"]["messages"] == res_dv["final"]["messages"]
+
+
+def test_strategy_census_is_invariant_on_host_engine():
+    """The telemetry census (participation, staleness histogram, bytes)
+    is identical across strategies under one seed — the zoo changes how
+    arrivals hit v, never which arrivals happen."""
+    reports = []
+    for spec in (None, "fedasync", {"kind": "fedbuff", "buffer_size": 3}):
+        res = CohortSimulator(_task(), strategy=spec,
+                              **_KW).run(max_rounds=3)
+        reports.append(res["telemetry"])
+    a = reports[0]
+    for b in reports[1:]:
+        assert list(a.participation) == list(b.participation)
+        assert list(a.staleness_hist) == list(b.staleness_hist)
+        assert int(a.bytes_up.sum()) == int(b.bytes_up.sum())
+
+
+def test_fedbuff_event_server_flushes_every_buffer_size():
+    """Direct Server-level check of the banked-apply semantics: v moves
+    only on every buffer_size-th received update."""
+    from repro.core.protocol import Server, UpdateMsg
+    srv = Server({"w": jnp.zeros((2,))}, n_clients=3,
+                 round_stepsizes=[1.0], strategy=FedBuffStrategy(2))
+    U = {"w": jnp.ones((2,))}
+    srv.receive(UpdateMsg(0, 0, U))
+    np.testing.assert_array_equal(np.asarray(srv.v["w"]), 0.0)  # banked
+    srv.receive(UpdateMsg(0, 1, U))
+    np.testing.assert_array_equal(np.asarray(srv.v["w"]), -2.0)  # flush
+    srv.receive(UpdateMsg(0, 2, U))
+    np.testing.assert_array_equal(np.asarray(srv.v["w"]), -2.0)  # banked
+
+
+def test_flconfig_aggregation_reaches_all_engines():
+    cfg_kw = dict(n_clients=4, sizes_per_client=[4, 6],
+                  round_stepsizes=[0.1, 0.08], d=1, seed=0)
+    for engine in ("event", "cohort", "device"):
+        cfg = FLConfig(engine=engine, cohort_block=4,
+                       aggregation="fedasync")
+        sim = make_simulator(cfg, _task(), **cfg_kw)
+        target = sim if engine == "event" else sim.engine
+        strat = (target.server.strategy if engine == "event"
+                 else target.strategy)
+        assert strat.kind == "fedasync"
