@@ -76,10 +76,13 @@ import json
 import statistics
 import time
 
+import jax
+
 from repro.cohort import as_cohort_task, make_simulator
 from repro.configs.base import FLConfig
 from repro.core import LogRegTask
 from repro.data import make_binary_dataset
+from repro.telemetry import cost_decomposition
 
 COHORTS = [64, 512, 4096]
 WORKLOADS = {
@@ -98,9 +101,14 @@ def _mk_task(X, y):
 
 
 def _time_run(sim, rounds: int) -> float:
-    t0 = time.time()
-    sim.run(max_rounds=rounds, eval_every=rounds)
-    return time.time() - t0
+    """One timed run; blocks on the final model so the async dispatch
+    queue drains inside the measured window, and keeps the run result
+    on the simulator (``bench_result``) for op-census attribution."""
+    t0 = time.perf_counter()
+    res = sim.run(max_rounds=rounds, eval_every=rounds)
+    jax.block_until_ready(res["model"])
+    sim.bench_result = res
+    return time.perf_counter() - t0
 
 
 def _median_run(mk_sim, rounds: int, reps: int = REPS) -> float:
@@ -114,17 +122,29 @@ def _engine_phases(mk_sim, rounds: int, C: int) -> dict:
     next (warm jit, cold data paths), ``steady`` the median of REPS
     fresh-simulator runs on the warm task.  The steady number is the
     one throughput claims quote; compile/warmup make the amortization
-    visible in BENCH_cohort.json instead of a single aggregate."""
+    visible in BENCH_cohort.json instead of a single aggregate.  Cohort
+    engines additionally carry their op census and its per-tick cost
+    decomposition (``cost``, incl. the roofline tick_overhead_ratio)."""
     compile_s = _time_run(mk_sim(), rounds)
     warmup_s = _time_run(mk_sim(), rounds)
-    steady_s = _median_run(mk_sim, rounds)
-    return {
+    times, tel = [], None
+    for _ in range(REPS):
+        sim = mk_sim()
+        times.append(_time_run(sim, rounds))
+        tel = sim.bench_result["telemetry"]
+    steady_s = statistics.median(times)
+    out = {
         "sec": steady_s,
         "client_rounds_per_sec": C * rounds / steady_s,
         "phases": {"compile_s": compile_s, "warmup_s": warmup_s,
                    "steady_s": steady_s,
                    "clients_per_sec": C / steady_s},
     }
+    if tel is not None and tel.ops:
+        out["ops"] = dict(tel.ops)
+        out["cost"] = cost_decomposition(tel.ops, steady_s=steady_s,
+                                         ticks=tel.ticks)
+    return out
 
 
 def _merge_write(report):
@@ -437,4 +457,8 @@ def run():
     rows += run_heavy_tail(report)
     rows += run_aggregation_zoo(report)
     _merge_write(report)
+    # regression-gate time series: one fingerprinted row per full run
+    from benchmarks.history import append_history
+    with open("BENCH_cohort.json") as f:
+        append_history(json.load(f))
     return rows

@@ -1,0 +1,237 @@
+"""Bench regression gate: fingerprinted history + baseline comparison.
+
+``bench_cohort_scale`` writes raw numbers to ``BENCH_cohort.json``; this
+module turns them into a time series and a CI gate:
+
+  * ``append_history`` flattens the bench report into per-workload
+    metrics (steady-state ``clients_per_sec``, ``compile_s``) and
+    appends one JSONL row to ``BENCH_history.jsonl`` together with a
+    machine fingerprint (platform / python / jax / backend / cpu count /
+    hashed hostname), so numbers from different machines never get
+    compared as if they were the same rig.
+  * ``check_regression`` compares a current report against a committed
+    baseline (``benchmarks/BENCH_baseline.json``) and returns one
+    problem string per workload whose throughput dropped more than
+    ``TOL_THROUGHPUT`` or whose compile time grew more than
+    ``TOL_COMPILE``.
+
+CLI (``PYTHONPATH=src python -m benchmarks.history <cmd>``):
+
+  append    BENCH_cohort.json -> BENCH_history.jsonl row
+  check     gate the current bench against the baseline; exits 1 on
+            regression.  A fingerprint mismatch (different machine)
+            downgrades to a warning unless ``--strict``.
+  rebase    write the committed baseline from the current bench
+  selftest  verify the gate MECHANICS: inject a synthetic slowdown
+            (default 20%) into the baseline's own metrics and exit 0
+            only if the gate catches it.  CI runs this blocking; the
+            real ``check`` stays advisory until runners are steady.
+
+The throughput tolerance (15%) is deliberately below the selftest's
+injected 20% slowdown, so the blocking selftest proves the gate would
+fire on a real regression of that size.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import platform
+import socket
+import time
+from typing import Any, Dict, List, Optional
+
+HISTORY_PATH = "BENCH_history.jsonl"
+BASELINE_PATH = "benchmarks/BENCH_baseline.json"
+#: fail when steady-state clients_per_sec drops by more than this
+TOL_THROUGHPUT = 0.15
+#: fail when cold-cache compile_s grows by more than this
+TOL_COMPILE = 0.50
+#: fingerprint keys that must match for numbers to be comparable
+COMPARABLE_KEYS = ("platform", "machine", "python", "jax", "backend")
+
+
+def fingerprint() -> Dict[str, Any]:
+    """Identity of the measuring rig (hostname only as a salted hash)."""
+    import jax
+    return {
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "cpus": os.cpu_count(),
+        "host": hashlib.sha256(
+            socket.gethostname().encode()).hexdigest()[:12],
+    }
+
+
+def extract_metrics(bench: Dict[str, Any]) -> Dict[str, Dict[str, float]]:
+    """Flatten BENCH_cohort.json: every entry carrying a ``phases``
+    block (the cohort/device engine legs) becomes one
+    ``workload/.../engine`` key with its gateable numbers."""
+    out: Dict[str, Dict[str, float]] = {}
+
+    def walk(node: Any, path: List[str]) -> None:
+        if not isinstance(node, dict):
+            return
+        ph = node.get("phases")
+        if isinstance(ph, dict) and "clients_per_sec" in ph:
+            out["/".join(path)] = {
+                "clients_per_sec": float(ph["clients_per_sec"]),
+                "compile_s": float(ph["compile_s"]),
+                "steady_s": float(ph["steady_s"]),
+            }
+            return
+        for k, v in node.items():
+            walk(v, path + [str(k)])
+
+    walk(bench, [])
+    return out
+
+
+def append_history(bench: Dict[str, Any], history_path: str = HISTORY_PATH,
+                   note: Optional[str] = None) -> Dict[str, Any]:
+    """Append one fingerprinted metrics row; returns the row."""
+    row: Dict[str, Any] = {"ts": time.time(), "fingerprint": fingerprint(),
+                           "metrics": extract_metrics(bench)}
+    if note:
+        row["note"] = note
+    with open(history_path, "a") as fh:
+        fh.write(json.dumps(row, sort_keys=True) + "\n")
+    return row
+
+
+def fingerprint_mismatches(a: Dict[str, Any], b: Dict[str, Any]
+                           ) -> List[str]:
+    return [f"{k}: {a.get(k)!r} != {b.get(k)!r}"
+            for k in COMPARABLE_KEYS if a.get(k) != b.get(k)]
+
+
+def check_regression(current: Dict[str, Dict[str, float]],
+                     baseline: Dict[str, Dict[str, float]], *,
+                     tol_throughput: float = TOL_THROUGHPUT,
+                     tol_compile: float = TOL_COMPILE) -> List[str]:
+    """Problem strings for every shared workload that regressed."""
+    problems: List[str] = []
+    shared = sorted(set(current) & set(baseline))
+    if not shared:
+        return ["no comparable workload keys between current bench and "
+                "baseline — did the bench run?"]
+    for key in shared:
+        cur, base = current[key], baseline[key]
+        b_tp = base.get("clients_per_sec", 0.0)
+        if b_tp > 0:
+            drop = 1.0 - cur.get("clients_per_sec", 0.0) / b_tp
+            if drop > tol_throughput:
+                problems.append(
+                    f"{key}: clients_per_sec "
+                    f"{cur['clients_per_sec']:,.0f} is {drop:.0%} below "
+                    f"baseline {b_tp:,.0f} (tolerance {tol_throughput:.0%})")
+        b_c = base.get("compile_s", 0.0)
+        if b_c > 0:
+            growth = cur.get("compile_s", 0.0) / b_c - 1.0
+            if growth > tol_compile:
+                problems.append(
+                    f"{key}: compile_s {cur['compile_s']:.2f}s is "
+                    f"{growth:.0%} above baseline {b_c:.2f}s "
+                    f"(tolerance {tol_compile:.0%})")
+    return problems
+
+
+def _load(path: str) -> Dict[str, Any]:
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.history",
+        description="bench history + regression gate for "
+                    "BENCH_cohort.json")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("append", help="append a fingerprinted history row")
+    p.add_argument("--bench", default="BENCH_cohort.json")
+    p.add_argument("--history", default=HISTORY_PATH)
+    p.add_argument("--note", default=None)
+
+    p = sub.add_parser("check", help="gate current bench vs baseline")
+    p.add_argument("--bench", default="BENCH_cohort.json")
+    p.add_argument("--baseline", default=BASELINE_PATH)
+    p.add_argument("--tol-throughput", type=float, default=TOL_THROUGHPUT)
+    p.add_argument("--tol-compile", type=float, default=TOL_COMPILE)
+    p.add_argument("--strict", action="store_true",
+                   help="fail on fingerprint mismatch instead of "
+                        "downgrading to a warning")
+
+    p = sub.add_parser("rebase", help="write baseline from current bench")
+    p.add_argument("--bench", default="BENCH_cohort.json")
+    p.add_argument("--baseline", default=BASELINE_PATH)
+
+    p = sub.add_parser("selftest",
+                       help="prove the gate catches an injected slowdown")
+    p.add_argument("--baseline", default=BASELINE_PATH)
+    p.add_argument("--slowdown", type=float, default=0.20)
+
+    args = ap.parse_args(argv)
+
+    if args.cmd == "append":
+        row = append_history(_load(args.bench), args.history, args.note)
+        print(f"appended {len(row['metrics'])} workload metrics to "
+              f"{args.history}")
+        return 0
+
+    if args.cmd == "rebase":
+        doc = {"ts": time.time(), "fingerprint": fingerprint(),
+               "metrics": extract_metrics(_load(args.bench))}
+        with open(args.baseline, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+        print(f"wrote {args.baseline}: {len(doc['metrics'])} workloads")
+        return 0
+
+    if args.cmd == "check":
+        base_doc = _load(args.baseline)
+        cur = extract_metrics(_load(args.bench))
+        mism = fingerprint_mismatches(fingerprint(),
+                                      base_doc.get("fingerprint", {}))
+        if mism and not args.strict:
+            print("fingerprint mismatch — numbers are not comparable, "
+                  "skipping the gate (use --strict to force):")
+            for m in mism:
+                print(f"  {m}")
+            return 0
+        problems = check_regression(
+            cur, base_doc["metrics"],
+            tol_throughput=args.tol_throughput,
+            tol_compile=args.tol_compile)
+        if mism:
+            problems = [f"fingerprint: {m}" for m in mism] + problems
+        for pb in problems:
+            print(f"REGRESSION: {pb}")
+        if problems:
+            return 1
+        print(f"OK: {len(set(cur) & set(base_doc['metrics']))} workloads "
+              f"within tolerance")
+        return 0
+
+    if args.cmd == "selftest":
+        base = _load(args.baseline)["metrics"]
+        slowed = {k: dict(v, clients_per_sec=v["clients_per_sec"]
+                          * (1.0 - args.slowdown))
+                  for k, v in base.items()}
+        problems = check_regression(slowed, base)
+        if not problems:
+            print(f"FAILED: gate did not flag an injected "
+                  f"{args.slowdown:.0%} slowdown")
+            return 1
+        print(f"OK: gate flags {len(problems)} workload(s) at an "
+              f"injected {args.slowdown:.0%} slowdown")
+        return 0
+
+    return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -26,6 +26,17 @@ Cohort-engine traces (one ``segment`` summary per eval boundary):
               across segments, and never exceeds the report's
               ``overflow_slots`` capacity
 
+Profiling layer (PR 9):
+
+  INV-SPAN    op-census discipline: per-segment ``ops`` cost counters
+              entrywise nondecreasing (they are cumulative), the final
+              report's op census satisfies the ``costs.check_ops``
+              relations against the message counts (complete_ticks ≤
+              messages, far_ticks ≤ far_groups ≤ far_messages, ...),
+              and — via ``check_perfetto`` — exported trace-event
+              documents are well-formed with wall-clock slices
+              non-overlapping per track
+
 Final ``report`` record (all engines):
 
   INV-CENSUS  bytes-on-wire census consistent with message counts:
@@ -142,8 +153,8 @@ def check_trace(trace: Union[str, Sequence[Record], Iterable[str]], *,
         # -- cohort segment family ------------------------------------------
         elif kind == "segment":
             if prev_seg is not None:
-                for fld in ("round", "tick", "messages", "broadcasts",
-                            "bytes_up_total"):
+                for fld in ("round", "tick", "time", "messages",
+                            "broadcasts", "bytes_up_total"):
                     a, b = prev_seg.get(fld), rec.get(fld)
                     if a is not None and b is not None and b < a:
                         out.append(_v(
@@ -162,6 +173,19 @@ def check_trace(trace: Union[str, Sequence[Record], Iterable[str]], *,
                             "INV-MONO", where, i,
                             f"staleness_hist regressed entrywise: "
                             f"{hb} after {ha}"))
+                pa = prev_seg.get("ops")
+                pb = rec.get("ops")
+                if pa is not None and pb is not None:
+                    if len(pa) != len(pb):
+                        out.append(_v("INV-SPAN", where, i,
+                                      "op-census length changed between "
+                                      "segments"))
+                    elif any(y < x for x, y in zip(pa, pb)):
+                        out.append(_v(
+                            "INV-SPAN", where, i,
+                            f"op-census cost counters regressed "
+                            f"entrywise: {pb} after {pa} — they are "
+                            f"cumulative by construction"))
                 oa = prev_seg.get("overflow_hwm")
                 ob = rec.get("overflow_hwm")
                 if oa is not None and ob is not None and ob < oa:
@@ -285,4 +309,27 @@ def check_report(report: Record, *, d: Optional[int] = None,
                 "INV-LATCH", where, line,
                 f"overflow_hwm {hwm} exceeds capacity overflow_slots "
                 f"{slots} — the err latch should have stopped the run"))
+    ops = report.get("ops")
+    if ops:
+        from repro.telemetry.costs import check_ops
+        for problem in check_ops(
+                ops, messages=messages, broadcasts=broadcasts,
+                far_messages=report.get("far_messages"),
+                clients=report.get("clients"),
+                ticks=report.get("ticks")):
+            out.append(_v("INV-SPAN", where, line, problem))
     return out
+
+
+def check_perfetto(doc: Union[str, Record], *,
+                   where: str = "<perfetto>") -> List[Violation]:
+    """INV-SPAN over an exported Chrome/Perfetto trace-event document
+    (path or already-parsed dict): well-formed events, and "X" slices
+    non-overlapping per (process, track)."""
+    if isinstance(doc, str):
+        where = doc
+        with open(doc) as fh:
+            doc = json.load(fh)
+    from repro.telemetry.spans import validate_trace_events
+    return [_v("INV-SPAN", where, 0, problem)
+            for problem in validate_trace_events(doc)]

@@ -33,6 +33,17 @@ function:
   * or nested inside / called by name from any of the above
     (same-module transitive closure).
 
+``check_files`` additionally closes over *cross-module* calls: when a
+traced function calls ``attn.attend_full(...)`` through a module alias
+(``from repro.models import attention as attn``) or ``chunked_loss(...)``
+through a from-import, and the target module is part of the analyzed
+set, the callee is linted as traced too.  The callee's taint is seeded
+from the call site — only parameters actually bound to tainted caller
+expressions start tainted — so static config threaded alongside arrays
+(window sizes, flags) does not trip PURITY-BRANCH.  Seeds accumulate to
+a fixpoint across call sites; package ``__init__`` re-exports are
+followed one level.
+
 Taint for PURITY-BRANCH is a single forward pass: the traced function's
 parameters are tainted, and a name assigned from an expression that
 mentions a tainted name becomes tainted.  Closure constants (ring sizes,
@@ -52,7 +63,7 @@ Deliberate taint exceptions (each is static at trace time):
 from __future__ import annotations
 
 import ast
-from typing import Dict, List, Optional, Sequence, Set, Union
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
 from repro.analysis.base import Violation
 
@@ -190,8 +201,14 @@ def _transitive(roots: Set[FuncNode], index: _FuncIndex) -> Set[FuncNode]:
 
 def _params(fn: FuncNode) -> Set[str]:
     a = fn.args
-    names = [p.arg for p in
-             list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)]
+    names = [p.arg for p in list(a.posonlyargs) + list(a.args)]
+    # keyword-only params with literal defaults are static config knobs
+    # by repo convention (window sizes, boolean flags) — branching on
+    # them is the trace-time specialization the engines rely on
+    for p, d in zip(a.kwonlyargs, a.kw_defaults):
+        if d is not None and isinstance(d, ast.Constant):
+            continue
+        names.append(p.arg)
     if a.vararg:
         names.append(a.vararg.arg)
     if a.kwarg:
@@ -255,11 +272,22 @@ def _test_is_static(expr: ast.expr) -> bool:
     return False
 
 
-def _check_traced_fn(fn: FuncNode, path: str,
-                     traced: Set[FuncNode]) -> List[Violation]:
+def _check_traced_fn(fn: FuncNode, path: str, traced: Set[FuncNode],
+                     seed: Optional[Set[str]] = None
+                     ) -> "Tuple[List[Violation], Set[str]]":
+    """Lint one traced function; returns (violations, final taint set).
+
+    With ``seed=None`` every non-static parameter starts tainted (the
+    local-root case).  A seed set — from cross-module call-site binding
+    — restricts the initial taint to the parameters actually fed traced
+    values by some caller.
+    """
     out: List[Violation] = []
     label = getattr(fn, "name", "<lambda>")
-    tainted = _params(fn) - _static_argnames(fn)
+    if seed is None:
+        tainted = _params(fn) - _static_argnames(fn)
+    else:
+        tainted = (set(seed) & _params(fn)) - _static_argnames(fn)
 
     def is_tainted(expr: ast.expr) -> bool:
         return bool(_names_in(expr) & tainted)
@@ -280,12 +308,15 @@ def _check_traced_fn(fn: FuncNode, path: str,
         for node in children:
             if isinstance(node, ast.stmt):
                 stmts.append(node)
-        # taint propagation
-        if isinstance(st, ast.Assign) and is_tainted(st.value):
+        # taint propagation — a value that is itself a static test
+        # (``flag = x is None``) yields trace-time Python, not an array
+        if isinstance(st, ast.Assign) and not _test_is_static(st.value) \
+                and is_tainted(st.value):
             for t in st.targets:
                 tainted.update(_names_in(t))
         if isinstance(st, (ast.AugAssign, ast.AnnAssign)) \
-                and st.value is not None and is_tainted(st.value):
+                and st.value is not None \
+                and not _test_is_static(st.value) and is_tainted(st.value):
             tainted.update(_names_in(st.target))
         # host-branching on traced values
         if isinstance(st, (ast.If, ast.While)) and test_tainted(st.test):
@@ -342,27 +373,214 @@ def _check_traced_fn(fn: FuncNode, path: str,
                     "PURITY-COERCE", path, node.lineno,
                     f"{node.func.id}() on traced value in {label}() — "
                     f"host coercion forces a sync"))
+    return out, tainted
+
+
+class _ModuleInfo:
+    """One analyzed file: its AST, traced set, and import bindings."""
+
+    def __init__(self, path: str, tree: ast.Module):
+        self.path = path
+        self.tree = tree
+        self.index = _FuncIndex()
+        self.index.visit(tree)
+        self.traced = _transitive(_traced_roots(tree, self.index),
+                                  self.index)
+        # dotted-name parts for suffix matching: src/repro/models/mlp.py
+        # -> ("src", "repro", "models", "mlp")
+        parts = path.replace("\\", "/").split("/")
+        if parts and parts[-1].endswith(".py"):
+            parts[-1] = parts[-1][:-3]
+        self.parts = tuple(p for p in parts if p not in ("", "."))
+        # local name -> dotted module (import a.b as x / from a import b)
+        self.mod_aliases: Dict[str, str] = {}
+        # local name -> (dotted module, original name) for from-imports
+        self.from_names: Dict[str, "Tuple[str, str]"] = {}
+        pkg = self.parts[:-1]
+        if self.parts and self.parts[-1] == "__init__":
+            pkg = self.parts[:-2] + self.parts[-2:-1]
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for al in node.names:
+                    if al.asname:
+                        self.mod_aliases[al.asname] = al.name
+            elif isinstance(node, ast.ImportFrom):
+                base = node.module or ""
+                if node.level:       # relative: anchor at this package
+                    up = pkg[:len(pkg) - (node.level - 1)] if node.level > 1 \
+                        else pkg
+                    base = ".".join(up) + ("." + base if base else "")
+                for al in node.names:
+                    local = al.asname or al.name
+                    if al.name == "*":
+                        continue
+                    # could be a submodule or a name in `base` — record
+                    # both; resolution tries module-suffix first
+                    self.mod_aliases.setdefault(
+                        local, f"{base}.{al.name}" if base else al.name)
+                    self.from_names[local] = (base, al.name)
+
+    def top_level_fn(self, name: str) -> Optional[FuncNode]:
+        cands = self.index.by_name.get(name, [])
+        for f in cands:
+            if self.index.parent[f] is None:
+                return f
+        return cands[0] if cands else None
+
+
+def _resolve_module(dotted: str, modules: "List[_ModuleInfo]"
+                    ) -> Optional[_ModuleInfo]:
+    """Find the analyzed file whose path ends with the dotted module
+    (``repro.models.attention`` matches src/repro/models/attention.py,
+    and a package name matches its ``__init__.py``)."""
+    want = tuple(dotted.split("."))
+    for m in modules:
+        if m.parts[-len(want):] == want:
+            return m
+        if m.parts[-1] == "__init__" and len(m.parts) > len(want) \
+                and m.parts[-len(want) - 1:-1] == want:
+            return m
+    return None
+
+
+def _resolve_call(info: _ModuleInfo, call: ast.Call,
+                  modules: "List[_ModuleInfo]", _depth: int = 0
+                  ) -> "Optional[Tuple[_ModuleInfo, FuncNode]]":
+    """Map a call in ``info`` to a function def in another analyzed
+    file, following module aliases, from-imports, and (one level)
+    package ``__init__`` re-exports."""
+    chain = _attr_chain(call.func)
+    target: "Optional[Tuple[str, str]]" = None
+    if len(chain) >= 2 and chain[0] in info.mod_aliases:
+        mod = info.mod_aliases[chain[0]]
+        if len(chain) > 2:
+            mod = mod + "." + ".".join(chain[1:-1])
+        target = (mod, chain[-1])
+    elif len(chain) == 1 and chain[0] in info.from_names:
+        target = info.from_names[chain[0]]
+    if target is None:
+        return None
+    mod, name = target
+    tinfo = _resolve_module(mod, modules)
+    if tinfo is None or tinfo is info:
+        return None
+    fn = tinfo.top_level_fn(name)
+    if fn is not None:
+        return tinfo, fn
+    # package __init__ re-export: follow `from X import name` one level
+    if _depth == 0 and name in tinfo.from_names:
+        sub, orig = tinfo.from_names[name]
+        sinfo = _resolve_module(sub, modules)
+        if sinfo is not None and sinfo is not info:
+            sfn = sinfo.top_level_fn(orig)
+            if sfn is not None:
+                return sinfo, sfn
+    return None
+
+
+def _seed_from_call(call: ast.Call, callee: FuncNode,
+                    caller_tainted: Set[str]) -> Set[str]:
+    """Callee params bound to tainted caller expressions at this site."""
+    a = callee.args
+    pos = [p.arg for p in list(a.posonlyargs) + list(a.args)]
+    seed: Set[str] = set()
+
+    def hot(expr: ast.expr) -> bool:
+        return bool(_names_in(expr) & caller_tainted)
+
+    for i, arg in enumerate(call.args):
+        if isinstance(arg, ast.Starred):
+            if hot(arg.value):      # can't bind positions — taint rest
+                seed.update(pos[i:])
+            break
+        if hot(arg):
+            seed.add(pos[i] if i < len(pos)
+                     else (a.vararg.arg if a.vararg else pos[-1] if pos
+                           else ""))
+    kw_ok = set(pos) | {p.arg for p in a.kwonlyargs}
+    for kw in call.keywords:
+        if kw.arg is None:          # **expansion: conservatively all
+            if hot(kw.value):
+                seed.update(kw_ok)
+        elif hot(kw.value):
+            seed.add(kw.arg if kw.arg in kw_ok
+                     else (a.kwarg.arg if a.kwarg else kw.arg))
+    seed.discard("")
+    return seed
+
+
+def _cross_call_seeds(info: _ModuleInfo, fn: FuncNode, tainted: Set[str],
+                      modules: "List[_ModuleInfo]"
+                      ) -> "List[Tuple[_ModuleInfo, FuncNode, Set[str]]]":
+    out = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        hit = _resolve_call(info, node, modules)
+        if hit is None:
+            continue
+        tinfo, tfn = hit
+        out.append((tinfo, tfn, _seed_from_call(node, tfn, tainted)))
     return out
 
 
 def check_file(path: str, source: Optional[str] = None) -> List[Violation]:
-    src = source if source is not None else open(path).read()
-    try:
-        tree = ast.parse(src, filename=path)
-    except SyntaxError as e:
-        return [Violation("PURITY-PARSE", path, e.lineno or 0,
-                          f"cannot parse: {e.msg}")]
-    index = _FuncIndex()
-    index.visit(tree)
-    traced = _transitive(_traced_roots(tree, index), index)
-    out: List[Violation] = []
-    for fn in sorted(traced, key=lambda f: f.lineno):
-        out.extend(_check_traced_fn(fn, path, traced))
-    return out
+    """Single-file lint (no cross-module closure)."""
+    return check_files([path], {path: source} if source is not None
+                       else None)
 
 
-def check_files(paths: Sequence[str]) -> List[Violation]:
+def check_files(paths: Sequence[str],
+                sources: Optional[Dict[str, str]] = None
+                ) -> List[Violation]:
     out: List[Violation] = []
+    modules: List[_ModuleInfo] = []
     for p in paths:
-        out.extend(check_file(p))
+        src = (sources or {}).get(p)
+        if src is None:
+            src = open(p).read()
+        try:
+            tree = ast.parse(src, filename=p)
+        except SyntaxError as e:
+            out.append(Violation("PURITY-PARSE", p, e.lineno or 0,
+                                 f"cannot parse: {e.msg}"))
+            continue
+        modules.append(_ModuleInfo(p, tree))
+
+    # phase 1: per-file roots, full-param taint; collect cross-module
+    # call seeds from every traced function's final taint
+    seeds: Dict["Tuple[int, int]", Set[str]] = {}
+    nodes: Dict["Tuple[int, int]", "Tuple[_ModuleInfo, FuncNode]"] = {}
+    work: List["Tuple[int, int]"] = []
+
+    def absorb(edges) -> None:
+        for tinfo, tfn, seed in edges:
+            if tfn in tinfo.traced:
+                continue            # already linted with full taint
+            key = (id(tinfo), id(tfn))
+            nodes[key] = (tinfo, tfn)
+            have = seeds.setdefault(key, set())
+            if not have >= seed:
+                have |= seed
+                if key not in work:
+                    work.append(key)
+
+    for info in modules:
+        for fn in sorted(info.traced, key=lambda f: f.lineno):
+            viols, tainted = _check_traced_fn(fn, info.path, info.traced)
+            out.extend(viols)
+            absorb(_cross_call_seeds(info, fn, tainted, modules))
+
+    # phase 2: fixpoint over call-site-seeded callees
+    cross: Dict["Tuple[int, int]", List[Violation]] = {}
+    while work:
+        key = work.pop(0)
+        tinfo, tfn = nodes[key]
+        viols, tainted = _check_traced_fn(
+            tfn, tinfo.path, tinfo.traced, seed=seeds[key])
+        cross[key] = viols          # replace: seeds only grow
+        absorb(_cross_call_seeds(tinfo, tfn, tainted, modules))
+    for key in sorted(cross, key=lambda k: (nodes[k][0].path,
+                                            nodes[k][1].lineno)):
+        out.extend(cross[key])
     return out

@@ -76,6 +76,8 @@ from repro.scenarios import (get_scenario, legacy_latency_scenario,
 from repro.sharding import cohort_mesh, cohort_shardings
 from repro.telemetry import (STALE_BINS, PhaseTimer, build_report,
                              open_trace, update_msg_bytes)
+from repro.telemetry.costs import (N_OPS, OP_FAR_GROUPS, OP_FAR_TICKS,
+                                   OP_RING_SCATTERS)
 
 # Unroll bound for the overflow bucket's per-completion-tick far-group
 # loop: one iteration per distinct far arrival tick.  Most tables have a
@@ -288,8 +290,9 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
             credit = credit - (n << FRAC_BITS)
             # idle ticks (everyone blocked / awaiting credit) skip the
             # block entirely — mirrors the host engine's nmax > 0 guard
+            any_block = jnp.any(n > 0)
             w, U = lax.cond(
-                jnp.any(n > 0),
+                any_block,
                 lambda ops: run_block(*ops),
                 lambda ops: (ops[0], ops[1]),
                 (w, st.U, st.i, st.h, n, eta))
@@ -299,14 +302,37 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
             #    all [C, D]-sized work gated on any round finishing
             done = active & (h >= s_i)
             done_i32 = done.astype(jnp.int32)
+            any_done = jnp.any(done)
             messages = st.messages + jnp.sum(done_i32)
             part = st.part + done_i32
             bytes_up = st.bytes_up + done_i32 * upd_bytes
 
+            # op census (repro.telemetry.costs): branch hits and row
+            # counts, int-only so the float math is untouched.  The
+            # delivery metrics re-evaluate do_deliver's take-mask
+            # OUTSIDE its lax.cond (cheap [B, C] int compares); the
+            # host engine counts clients whose k advanced — identical.
+            dlv_take = jnp.max(jnp.where(elig, bc_k[:, None], 0),
+                               axis=0) > st.k
+            deliver_rows = jnp.sum(dlv_take.astype(jnp.int32))
+            op_inc = jnp.stack([
+                jnp.int32(1),                               # ticks
+                any_block.astype(jnp.int32),                # block_ticks
+                has_arrivals.astype(jnp.int32),             # bucket_applies
+                (server_k > st.server_k).astype(jnp.int32),  # cascade_ticks
+                (deliver_rows > 0).astype(jnp.int32),       # deliver_ticks
+                deliver_rows,                               # deliver_rows
+                jnp.int32(0),                   # ring_scatters (do_complete)
+                any_done.astype(jnp.int32),                 # complete_ticks
+                jnp.int32(0),                   # far_ticks (do_complete)
+                jnp.int32(0),                   # far_groups (do_far)
+            ])
+            op_census = st.ops + op_inc
+
             def do_complete(ops):
                 (w, U, upd_vec, upd_cnt, upd_ks, upd_kvec, ovf_vec,
                  ovf_at, ovf_cnt, ovf_ks, ovf_kvec, ovf_hwm, far_msgs,
-                 err) = ops
+                 err, op_census) = ops
                 if dp_on:
                     nk = jax.random.fold_in(noise_base, t)
                     noised, _ = cohort_clip_noise(
@@ -336,9 +362,11 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                 # loop — rows with no arrivals keep their old value
                 # bitwise (guarded add, not old + 0).
                 kmod = k & (R - 1) if stratified else None
+                ring_sc = jnp.int32(0)    # distinct near slots scattered
                 if stratified:
                     for sl in range(L):
                         in_l = near & (arr_slot == sl)
+                        ring_sc = ring_sc + jnp.any(in_l).astype(jnp.int32)
                         for r in range(R):
                             in_lr = in_l & (kmod == r)
                             vec = jnp.sum(
@@ -352,6 +380,7 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                 else:
                     for sl in range(L):
                         in_l = near & (arr_slot == sl)
+                        ring_sc = ring_sc + jnp.any(in_l).astype(jnp.int32)
                         vec = jnp.sum(
                             sent
                             * (eta * in_l.astype(jnp.float32))[:, None],
@@ -371,15 +400,21 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                 oh_s = ((k & (R - 1))[:, None]
                         == jnp.arange(R)[None, :]).astype(jnp.int32)
                 upd_ks = upd_ks + jnp.einsum("cl,cr->lr", oh_l, oh_s)
+                op_census = op_census.at[OP_RING_SCATTERS].add(ring_sc)
                 if F > 0:
                     far_mask = done & (arr_off >= L)
                     arr_tick = t + arr_off
                     far_msgs = far_msgs + jnp.sum(
                         far_mask.astype(jnp.int32))
+                    # do_far runs iff any(far_mask): counting its branch
+                    # hit here (inside do_complete) is equivalent
+                    op_census = op_census.at[OP_FAR_TICKS].add(
+                        jnp.any(far_mask).astype(jnp.int32))
 
                     def do_far(fops):
                         (ovf_vec, ovf_at, ovf_cnt, ovf_ks, ovf_kvec,
-                         ovf_hwm, err) = fops
+                         ovf_hwm, err, op_census) = fops
+                        far_grps = jnp.int32(0)
                         remaining = far_mask
                         # one unroll step per DISTINCT far arrival tick,
                         # ascending (matches the host's np.unique order);
@@ -391,6 +426,7 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                                 jnp.int32(2 ** 31 - 1)))
                             grp = remaining & (arr_tick == tick_q)
                             any_grp = jnp.any(grp)
+                            far_grps = far_grps + any_grp.astype(jnp.int32)
                             vec = jnp.sum(
                                 sent * (eta
                                         * grp.astype(jnp.float32))[:, None],
@@ -446,26 +482,28 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                         ovf_hwm = jnp.maximum(
                             ovf_hwm,
                             jnp.sum((ovf_at != 0).astype(jnp.int32)))
+                        op_census = op_census.at[OP_FAR_GROUPS].add(
+                            far_grps)
                         return (ovf_vec, ovf_at, ovf_cnt, ovf_ks,
-                                ovf_kvec, ovf_hwm, err)
+                                ovf_kvec, ovf_hwm, err, op_census)
 
                     (ovf_vec, ovf_at, ovf_cnt, ovf_ks, ovf_kvec,
-                     ovf_hwm, err) = lax.cond(
+                     ovf_hwm, err, op_census) = lax.cond(
                         jnp.any(far_mask), do_far, lambda fops: fops,
                         (ovf_vec, ovf_at, ovf_cnt, ovf_ks, ovf_kvec,
-                         ovf_hwm, err))
+                         ovf_hwm, err, op_census))
                 U = jnp.where(done[:, None], 0.0, sent)
                 return (w, U, upd_vec, upd_cnt, upd_ks, upd_kvec,
                         ovf_vec, ovf_at, ovf_cnt, ovf_ks, ovf_kvec,
-                        ovf_hwm, far_msgs, err)
+                        ovf_hwm, far_msgs, err, op_census)
 
             (w, U, upd_vec, upd_cnt, upd_ks, upd_kvec, ovf_vec, ovf_at,
-             ovf_cnt, ovf_ks, ovf_kvec, ovf_hwm, far_msgs,
-             err) = lax.cond(
-                jnp.any(done), do_complete, lambda ops: ops,
+             ovf_cnt, ovf_ks, ovf_kvec, ovf_hwm, far_msgs, err,
+             op_census) = lax.cond(
+                any_done, do_complete, lambda ops: ops,
                 (w, U, upd_vec, upd_cnt, upd_ks, upd_kvec, ovf_vec,
                  ovf_at, ovf_cnt, ovf_ks, ovf_kvec, st.ovf_hwm,
-                 st.far_msgs, st.err))
+                 st.far_msgs, st.err, op_census))
             i = jnp.where(done, st.i + 1, st.i)
             h = jnp.where(done, 0, h)
             credit = jnp.where(
@@ -480,7 +518,8 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                 broadcasts=broadcasts, part=part, bytes_up=bytes_up,
                 stale_hist=stale_hist, upd_ks=upd_ks, ovf_ks=ovf_ks,
                 ovf_hwm=ovf_hwm, far_msgs=far_msgs, upd_kvec=upd_kvec,
-                ovf_kvec=ovf_kvec, buf_vec=buf_vec, buf_cnt=buf_cnt)
+                ovf_kvec=ovf_kvec, buf_vec=buf_vec, buf_cnt=buf_cnt,
+                ops=op_census)
 
         return lax.while_loop(
             lambda s: ((s.server_k < target_k) & (s.tick < tick_limit)
@@ -609,7 +648,8 @@ class DeviceCohortEngine:
                                else (1, 1, 1), jnp.float32),
             buf_vec=jnp.zeros((D,) if self.strategy.buffered else (1,),
                               jnp.float32),
-            buf_cnt=jnp.int32(0))
+            buf_cnt=jnp.int32(0),
+            ops=jnp.zeros((N_OPS,), jnp.int32))
         return DeviceCohortState(**{
             f: jax.device_put(val, self._shardings[f])
             for f, val in fields.items()})
@@ -666,7 +706,9 @@ class DeviceCohortEngine:
         seg = self._segment_fn()
         st = self.state
         next_eval = eval_every
-        timer = PhaseTimer()
+        # kept on the engine so the timeline CLI (python -m
+        # repro.telemetry capture) can export the wall spans after run()
+        timer = self.timer = PhaseTimer()
         first_segment = True
         while True:
             target = min(next_eval, max_rounds)
@@ -692,6 +734,11 @@ class DeviceCohortEngine:
                                  self._accrual_dev, tgt, lim)
                 self.state = st
                 sk = int(st.server_k)        # the one sync per segment
+                # phase-accurate timing: the while_loop's outputs
+                # materialize together, but make the boundary explicit
+                # so async dispatch can never charge segment work to
+                # the eval phase that follows
+                jax.block_until_ready(st.v)
             first_segment = False
             if sk < target:
                 if int(st.err) != 0:
@@ -712,15 +759,17 @@ class DeviceCohortEngine:
                     f"{int(jnp.sum(jnp.any(st.bc_at > st.tick, axis=1)))}"
                     f" broadcasts)")
             if sk >= next_eval:
-                m = evals(st.v)
-                m.update(round=sk, time=int(st.tick) * self.dt,
-                         messages=int(st.messages))
-                self.history.append(m)
-                next_eval = sk + eval_every
-                self._emit_segment()
+                with timer.phase("eval"):
+                    m = evals(st.v)
+                    m.update(round=sk, time=int(st.tick) * self.dt,
+                             messages=int(st.messages))
+                    self.history.append(m)
+                    next_eval = sk + eval_every
+                    self._emit_segment()
             if sk >= max_rounds:
                 break
-        final = evals(st.v)
+        with timer.phase("eval"):
+            final = evals(st.v)
         # overflow telemetry surfaced for ring_cap tuning: the high-water
         # mark against the Q-slot capacity plus the far-routed share
         final.update(round=sk, time=int(st.tick) * self.dt,
@@ -743,12 +792,14 @@ class DeviceCohortEngine:
         st = self.state
         self._trace.emit(
             "segment", engine="device", round=int(st.server_k),
-            tick=int(st.tick), messages=int(st.messages),
+            tick=int(st.tick), time=int(st.tick) * self.dt,
+            messages=int(st.messages),
             broadcasts=int(st.broadcasts),
             bytes_up_total=int(np.asarray(st.bytes_up,
                                           dtype=np.int64).sum()),
             staleness_hist=np.asarray(st.stale_hist),
-            overflow_hwm=int(st.ovf_hwm))
+            overflow_hwm=int(st.ovf_hwm),
+            ops=np.asarray(st.ops))
 
     def telemetry_report(self, wall=None):
         """MetricsReport from the on-device counters (syncs the state)."""
@@ -765,6 +816,7 @@ class DeviceCohortEngine:
             overflow_slots=self.Q if self.F else 0,
             far_messages=int(st.far_msgs),
             ticks=int(st.tick),
+            ops=np.asarray(st.ops, dtype=np.int64),
             dp_sigma=self.dp_sigma, dp_delta=self.dp_delta,
             n_examples=(int(src_task.X.shape[0])
                         if hasattr(src_task, "X") else None),

@@ -48,6 +48,11 @@ from repro.kernels.cohort_dp import cohort_clip_noise
 from repro.scenarios import get_scenario, scenario_plan
 from repro.telemetry import (STALE_BINS, PhaseTimer, build_report,
                              open_trace, staleness_bin, update_msg_bytes)
+from repro.telemetry.costs import (OP_BLOCK_TICKS, OP_BUCKET_APPLIES,
+                                   OP_CASCADE_TICKS, OP_COMPLETE_TICKS,
+                                   OP_DELIVER_ROWS, OP_DELIVER_TICKS,
+                                   OP_FAR_GROUPS, OP_FAR_TICKS,
+                                   OP_RING_SCATTERS, OP_TICKS, zero_ops)
 
 
 def _commit(x, dtype=None):
@@ -211,6 +216,10 @@ class CohortEngine:
         self.stale_hist = np.zeros(STALE_BINS, dtype=np.int64)
         self.ovf_hwm = 0
         self.far_messages = 0
+        # op census (repro.telemetry.costs): numpy mirror of the device
+        # engine's in-loop [N_OPS] vector, incremented at the exact same
+        # protocol points — the parity contract pins it bitwise equal
+        self.ops = zero_ops()
         self.dp_delta = float(dp_delta)
         self._trace = open_trace(trace)
         self.history: List[Dict[str, float]] = []
@@ -252,6 +261,7 @@ class CohortEngine:
         st = self.state
         st.tick += 1
         t = st.tick
+        self.ops[OP_TICKS] += 1
 
         # 1) server: apply this tick's arrival bucket, maybe broadcast.
         # far + near in THIS order — the device engine applies
@@ -263,6 +273,7 @@ class CohortEngine:
         else:
             total = far if far is not None else near
         if total is not None:
+            self.ops[OP_BUCKET_APPLIES] += 1
             if strat.stratified:
                 # FedAsync: total is [R, D] by sender k; decay rows by
                 # staleness against the pre-cascade server_k
@@ -283,14 +294,20 @@ class CohortEngine:
             # staleness-at-apply, binned against the PRE-cascade server_k
             # (the device engine reads st.server_k at the same point)
             self.stale_hist[staleness_bin(st.server_k - ks)] += 1
+        k_pre_cascade = st.server_k
         while self._h_counts.get(st.server_k, 0) >= self.C:
             del self._h_counts[st.server_k]
             st.server_k += 1
             self.total_broadcasts += 1
             at = t + self._bcast_ticks(st.server_k)
             self.bcasts.push(st.server_k, st.v, at)
+        if st.server_k > k_pre_cascade:
+            self.ops[OP_CASCADE_TICKS] += 1
 
         # 2) deliver due broadcasts, ascending k, freshest-wins per client
+        # op census: clients whose freshest-seen k advances this tick ==
+        # the rows the device engine's delivery gather replaces
+        k_before = st.k.copy()
         due = self.bcasts.due(t)
         for b in due:
             take = (b["at"] <= t) & (b["k"] > st.k)
@@ -301,6 +318,10 @@ class CohortEngine:
                 st.k[take] = b["k"]
         if due:
             self.bcasts.retire(t)
+        deliver_rows = int(np.sum(st.k > k_before))
+        self.ops[OP_DELIVER_ROWS] += deliver_rows
+        if deliver_rows:
+            self.ops[OP_DELIVER_TICKS] += 1
 
         # 3) advance the cohort: one vmapped masked block.  Availability
         #    gates compute, credit accrual AND round completion — an off
@@ -316,6 +337,7 @@ class CohortEngine:
         np.maximum(n, 0, out=n)
         nmax = int(n.max())
         if nmax > 0:
+            self.ops[OP_BLOCK_TICKS] += 1
             st.credit -= n << FRAC_BITS
             eta = _commit(self._eta_of(st.i), np.float32)
             st.w, st.U = self.ctask.run_block(
@@ -332,6 +354,7 @@ class CohortEngine:
     def _finish_rounds(self, done: np.ndarray) -> None:
         st = self.state
         idx = np.flatnonzero(done)
+        self.ops[OP_COMPLETE_TICKS] += 1
         self.total_messages += len(idx)
         self.part[idx] += 1
         self.bytes_up[idx] += self._upd_bytes
@@ -373,12 +396,19 @@ class CohortEngine:
         # finishing client will stamp on its message is st.k, pinned here
         # BEFORE the round advance below
         kmod = (st.k & (self.R - 1)) if strat.stratified else None
+        far_groups = 0
         for g in groups:
             in_g = arrive == g
             far = ring is not None and int(g) - st.tick >= ring
             members = np.flatnonzero(in_g)
+            # op census: a near group is one distinct ring-slot scatter,
+            # a far group one overflow-bucket insert — the device engine
+            # counts the same masked writes inside do_complete / do_far
             if far:
+                far_groups += 1
                 self.far_messages += len(members)
+            else:
+                self.ops[OP_RING_SCATTERS] += 1
             pairs_list = [(int(st.i[c]), int(c), int(st.k[c]))
                           for c in members]
             if strat.stratified:
@@ -395,6 +425,9 @@ class CohortEngine:
             else:
                 vec = _weighted_sum(sent, _commit(eta * in_g, np.float32))
             self.updates.add(int(g), vec, pairs_list, far=far)
+        if far_groups:
+            self.ops[OP_FAR_TICKS] += 1
+            self.ops[OP_FAR_GROUPS] += far_groups
         # far-tier occupancy high-water mark == the device engine's peak
         # count of occupied overflow slots (one slot per pending far tick)
         self.ovf_hwm = max(self.ovf_hwm, len(self.updates.far_contrib))
@@ -426,14 +459,20 @@ class CohortEngine:
                                           self.block, max_rounds,
                                           lat_tail_ticks=tail, duty=duty)
         next_eval = eval_every
-        timer = PhaseTimer()
+        # kept on the engine so the timeline CLI (python -m
+        # repro.telemetry capture) can export the wall spans after run()
+        timer = self.timer = PhaseTimer()
         import time
         run_t0 = time.perf_counter()
         # First segment runs unguarded (jit compiles may stage host
         # constants); once warm, steady-segment ticks run under
         # transfer_guard("disallow") like DeviceCohortEngine.run — any
         # implicit host->device transfer inside a tick is a perf bug.
+        # Phase accounting matches the device engine (first_segment /
+        # steady / eval), with block_until_ready closing each segment so
+        # async tick dispatch can't be charged to the eval that follows.
         guarded = False
+        seg_t0 = run_t0
         while st.server_k < max_rounds:
             if st.tick >= max_ticks:
                 raise RuntimeError(
@@ -447,14 +486,23 @@ class CohortEngine:
             else:
                 self.step()
             if st.server_k >= next_eval:
-                m = evals(st.v)
-                m.update(round=st.server_k, time=st.tick * self.dt,
-                         messages=self.total_messages)
-                self.history.append(m)
-                next_eval = st.server_k + eval_every
-                self._emit_segment()
+                jax.block_until_ready(st.v)
+                timer.add("first_segment" if not guarded else "steady",
+                          time.perf_counter() - seg_t0)
+                with timer.phase("eval"):
+                    m = evals(st.v)
+                    m.update(round=st.server_k, time=st.tick * self.dt,
+                             messages=self.total_messages)
+                    self.history.append(m)
+                    next_eval = st.server_k + eval_every
+                    self._emit_segment()
                 guarded = True
-        final = evals(st.v)
+                seg_t0 = time.perf_counter()
+        jax.block_until_ready(st.v)
+        timer.add("first_segment" if not guarded else "steady",
+                  time.perf_counter() - seg_t0)
+        with timer.phase("eval"):
+            final = evals(st.v)
         final.update(round=st.server_k, time=st.tick * self.dt,
                      messages=self.total_messages,
                      broadcasts=self.total_broadcasts,
@@ -475,11 +523,13 @@ class CohortEngine:
         st = self.state
         self._trace.emit(
             "segment", engine="host", round=int(st.server_k),
-            tick=int(st.tick), messages=self.total_messages,
+            tick=int(st.tick), time=int(st.tick) * self.dt,
+            messages=self.total_messages,
             broadcasts=self.total_broadcasts,
             bytes_up_total=int(self.bytes_up.sum()),
             staleness_hist=self.stale_hist,
-            overflow_hwm=self.ovf_hwm)
+            overflow_hwm=self.ovf_hwm,
+            ops=self.ops.copy())
 
     def telemetry_report(self, wall=None):
         """MetricsReport from the counters accumulated so far."""
@@ -492,7 +542,7 @@ class CohortEngine:
             participation=self.part, bytes_up=self.bytes_up,
             staleness_hist=self.stale_hist,
             overflow_hwm=self.ovf_hwm, far_messages=self.far_messages,
-            ticks=int(st.tick),
+            ticks=int(st.tick), ops=self.ops,
             dp_sigma=self.dp_sigma, dp_delta=self.dp_delta,
             n_examples=(int(src_task.X.shape[0])
                         if hasattr(src_task, "X") else None),

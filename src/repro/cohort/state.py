@@ -189,6 +189,12 @@ class DeviceCohortState(NamedTuple):
     ovf_kvec: Any          # [Q, R, D] f32 overflow buckets by sender k
     buf_vec: Any           # [D]       f32 FedBuff flush accumulator
     buf_cnt: Any           # []        i32 updates buffered since flush
+    # op census (repro.telemetry.costs): which tick-loop operations ran
+    # — branch hits, delivery rows, ring scatters — one cumulative i32
+    # vector indexed by costs.OP_NAMES, threaded through the same
+    # lax.cond operand tuples as the census so the float math is
+    # untouched; host engine mirrors it bitwise.
+    ops: Any               # [N_OPS]   i32 op-census counters
 
 
 @dataclass

@@ -222,7 +222,9 @@ class AsyncFLSimulator:
         """Run until the server has completed ``max_rounds`` broadcasts."""
         evals = eval_fn or (lambda w: self.task.metrics(w))
         next_eval = eval_every
-        timer = PhaseTimer()
+        # kept on the simulator so the timeline CLI (python -m
+        # repro.telemetry capture) can export the wall spans after run()
+        timer = self.timer = PhaseTimer()
         run_t0 = time.perf_counter()
         while self.events and self.server.k < max_rounds:
             ev = heapq.heappop(self.events)
@@ -234,12 +236,14 @@ class AsyncFLSimulator:
             elif ev.kind == "broadcast_arrival":
                 self._on_broadcast_arrival(ev)
             if self.server.k >= next_eval:
-                m = evals(self.server.v)
+                with timer.phase("eval"):
+                    m = evals(self.server.v)
                 m.update(round=self.server.k, time=self.now,
                          messages=self.total_messages)
                 self.history.append(m)
                 next_eval = self.server.k + eval_every
-        final = evals(self.server.v)
+        with timer.phase("eval"):
+            final = evals(self.server.v)
         final.update(round=self.server.k, time=self.now,
                      messages=self.total_messages,
                      broadcasts=self.total_broadcasts)

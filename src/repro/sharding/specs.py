@@ -157,6 +157,9 @@ def cohort_pspecs(mesh: Mesh, n_clients: int) -> Dict[str, P]:
         # default paper strategy)
         "upd_kvec": P(None, None, None), "ovf_kvec": P(None, None, None),
         "buf_vec": P(None), "buf_cnt": P(),
+        # op-census vector (repro.telemetry.costs): scalar-ish counter
+        # block, replicates like the other telemetry scalars
+        "ops": P(None),
     }
 
 

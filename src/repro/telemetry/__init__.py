@@ -1,17 +1,29 @@
 """Telemetry: communication census, staleness/participation metrics,
-per-client DP accounting, JSONL traces, and phase profiling — one
+per-client DP accounting, JSONL traces, the in-loop op census, and
+span-based profiling with Perfetto timeline export — one
 ``MetricsReport`` schema shared by all three engines."""
+from repro.telemetry.costs import (
+    N_OPS, OP_NAMES, check_ops, cost_decomposition, ops_dict, ops_vector,
+    zero_ops,
+)
 from repro.telemetry.report import (
     HEADER_BYTES, STALE_BINS, MetricsReport, broadcast_msg_bytes,
     build_report, model_flat_dim, participation_sizes, staleness_bin,
     update_msg_bytes,
 )
+from repro.telemetry.spans import (
+    PhaseTimer, SpanRecorder, trace_to_perfetto, validate_trace_events,
+    write_perfetto,
+)
 from repro.telemetry.trace import JsonlTraceWriter, open_trace
-from repro.telemetry.profiling import PhaseTimer
 
 __all__ = [
     "HEADER_BYTES", "STALE_BINS", "MetricsReport", "broadcast_msg_bytes",
     "build_report", "model_flat_dim", "participation_sizes",
     "staleness_bin", "update_msg_bytes",
-    "JsonlTraceWriter", "open_trace", "PhaseTimer",
+    "JsonlTraceWriter", "open_trace",
+    "PhaseTimer", "SpanRecorder", "trace_to_perfetto",
+    "validate_trace_events", "write_perfetto",
+    "N_OPS", "OP_NAMES", "check_ops", "cost_decomposition", "ops_dict",
+    "ops_vector", "zero_ops",
 ]

@@ -44,6 +44,8 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.telemetry.costs import ops_dict
+
 # Fixed number of staleness bins: bins 0..STALE_BINS-2 count exact
 # staleness values, the last bin absorbs everything >= STALE_BINS-1.
 STALE_BINS = 8
@@ -100,6 +102,10 @@ class MetricsReport:
     virtual_time: Optional[float] = None   # event sim only (seconds)
     dp: Optional[List[Dict[str, Any]]] = None  # per-client accounting rows
     wall: Dict[str, float] = field(default_factory=dict)  # profiling
+    # op census (repro.telemetry.costs): which tick-loop operations ran,
+    # keyed by costs.OP_NAMES — cohort engines only, bitwise
+    # host-vs-device like the counters above
+    ops: Optional[Dict[str, int]] = None
 
     # -- serialization ----------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
@@ -141,8 +147,15 @@ class MetricsReport:
             if eps:
                 lines.append(f"  dp: max per-client epsilon={max(eps):.4g} "
                              f"over {len(self.dp)} clients")
+        if self.ops:
+            frag = " ".join(f"{k}={int(v)}" for k, v in self.ops.items())
+            lines.append(f"  ops: {frag}")
         if self.wall:
-            frag = " ".join(f"{k}={v:.3g}s" for k, v in self.wall.items())
+            # phase entries are seconds (``_s``); their span counts
+            # (``_n``, see SpanRecorder.as_dict) are plain integers
+            frag = " ".join(
+                f"{k}={v:.3g}s" if k.endswith("_s") else f"{k}={int(v)}"
+                for k, v in self.wall.items())
             lines.append(f"  wall: {frag}")
         return "\n".join(lines)
 
@@ -175,7 +188,8 @@ def build_report(*, engine: str, clients: int, flat_dim: int, rounds: int,
                  dp_sigma: float = 0.0, dp_delta: float = 1e-5,
                  n_examples: Optional[int] = None,
                  sizes_per_client: Optional[Sequence[Sequence[int]]] = None,
-                 wall: Optional[Dict[str, float]] = None) -> MetricsReport:
+                 wall: Optional[Dict[str, float]] = None,
+                 ops=None) -> MetricsReport:
     """Assemble a MetricsReport from raw engine counters.
 
     Derives bytes_down (every fired broadcast reaches the whole fleet)
@@ -203,4 +217,6 @@ def build_report(*, engine: str, clients: int, flat_dim: int, rounds: int,
         staleness_hist=np.asarray(staleness_hist, dtype=np.int64),
         overflow_hwm=int(overflow_hwm), overflow_slots=overflow_slots,
         far_messages=int(far_messages), ticks=ticks,
-        virtual_time=virtual_time, dp=dp_rows, wall=dict(wall or {}))
+        virtual_time=virtual_time, dp=dp_rows, wall=dict(wall or {}),
+        ops=(ops if isinstance(ops, dict) or ops is None
+             else ops_dict(ops)))

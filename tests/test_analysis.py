@@ -357,6 +357,88 @@ def test_purity_static_escapes_stay_silent():
     assert found == []
 
 
+def test_purity_cross_module_closure_fires():
+    """check_files follows the module-alias attribute-call idiom
+    (``attn.attend_full``-style) and from-imports into other analyzed
+    files: impurities in the callee are flagged even though the callee's
+    module has no traced roots of its own."""
+    root = _src("""
+        import jax
+        from pkg.models import helper as hm
+        from pkg.models.helper import leaf
+
+        @jax.jit
+        def step(x, w):
+            y = hm.mix(x, w, 4)
+            return leaf(y)
+    """)
+    helper = _src("""
+        import numpy as np
+
+        def mix(q, k, width):
+            if width > 2:        # static at every call site: clean
+                q = q + k
+            if q.sum() > 0:      # tainted via call-site seed
+                q = -q
+            return q
+
+        def leaf(z):
+            return z * np.random.rand()
+    """)
+    srcs = {"pkg/models/root.py": root, "pkg/models/helper.py": helper}
+    found = purity.check_files(list(srcs), srcs)
+    assert _rules(found) == ["PURITY-BRANCH", "PURITY-NPRANDOM"]
+    assert all(v.path == "pkg/models/helper.py" for v in found)
+    # the width > 2 branch did NOT fire: call-site seeding keeps static
+    # config untainted in the callee
+    assert len([v for v in found if v.rule == "PURITY-BRANCH"]) == 1
+    # single-file analysis of the caller alone stays silent
+    assert purity.check_files(["pkg/models/root.py"],
+                              {"pkg/models/root.py": root}) == []
+
+
+def test_purity_closure_follows_init_reexport():
+    """One level of package ``__init__`` re-export resolution."""
+    init = "from pkg.models.helper import mix\n"
+    helper = _src("""
+        def mix(q, k):
+            for row in q:        # tainted loop in the callee
+                k = k + row
+            return k
+    """)
+    use = _src("""
+        import jax
+        from pkg.models import mix
+
+        @jax.jit
+        def step(x):
+            return mix(x, x)
+    """)
+    srcs = {"pkg/models/__init__.py": init,
+            "pkg/models/helper.py": helper,
+            "pkg/models/use.py": use}
+    found = purity.check_files(list(srcs), srcs)
+    assert _rules(found) == ["PURITY-BRANCH"]
+    assert found[0].path == "pkg/models/helper.py"
+
+
+def test_purity_kwonly_constant_default_is_static():
+    """Keyword-only params with literal defaults are config knobs —
+    branching on them in a traced function stays silent."""
+    found = purity.check_file("fake/mod.py", _src("""
+        import jax
+        @jax.jit
+        def step(x, *, window=None, chunk=128):
+            if window is not None and chunk > 64:
+                x = x[:chunk]
+            flag = window is None
+            if flag:
+                x = x + 1
+            return x
+    """))
+    assert found == []
+
+
 def test_purity_repo_is_clean():
     files = iter_py_files(["src/repro"])
     assert purity.check_files(files) == []

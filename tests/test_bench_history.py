@@ -1,0 +1,128 @@
+"""Bench regression gate (benchmarks/history.py): metric extraction
+from BENCH_cohort.json-shaped reports, the tolerance math, and the
+fingerprint comparability guard.  Pure-logic tests — no bench runs.
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.history import (  # noqa: E402
+    COMPARABLE_KEYS, check_regression, extract_metrics,
+    fingerprint_mismatches, main)
+
+BENCH = {
+    "compute_r2_s8": {
+        "4096": {
+            "clients": 4096,
+            "cohort": {"sec": 0.02, "phases": {
+                "compile_s": 1.0, "warmup_s": 0.05, "steady_s": 0.02,
+                "clients_per_sec": 200_000.0}},
+            "device": {"sec": 0.01, "phases": {
+                "compile_s": 2.0, "warmup_s": 0.05, "steady_s": 0.01,
+                "clients_per_sec": 400_000.0}},
+            # event leg has no phases block: not gateable, must be skipped
+            "event": {"sec": 0.5, "client_rounds_per_sec": 16_384.0},
+        },
+    },
+    "scenario_smoke": {
+        "mobile_diurnal": {"64": {"device": {"phases": {
+            "compile_s": 0.5, "warmup_s": 0.01, "steady_s": 0.005,
+            "clients_per_sec": 12_800.0}}}},
+    },
+    "derived": "free-text summary, ignored",
+}
+
+
+def test_extract_metrics_flattens_phase_blocks():
+    m = extract_metrics(BENCH)
+    assert set(m) == {
+        "compute_r2_s8/4096/cohort",
+        "compute_r2_s8/4096/device",
+        "scenario_smoke/mobile_diurnal/64/device",
+    }
+    dv = m["compute_r2_s8/4096/device"]
+    assert dv == {"clients_per_sec": 400_000.0, "compile_s": 2.0,
+                  "steady_s": 0.01}
+
+
+def test_check_regression_tolerances():
+    base = extract_metrics(BENCH)
+    # identical numbers: clean
+    assert check_regression(base, base) == []
+    # 10% throughput drop: inside the 15% tolerance
+    ok = {k: dict(v, clients_per_sec=v["clients_per_sec"] * 0.90)
+          for k, v in base.items()}
+    assert check_regression(ok, base) == []
+    # 20% drop on one workload: exactly that workload flagged
+    slow = {k: dict(v) for k, v in base.items()}
+    slow["compute_r2_s8/4096/device"]["clients_per_sec"] *= 0.80
+    problems = check_regression(slow, base)
+    assert len(problems) == 1
+    assert "compute_r2_s8/4096/device" in problems[0]
+    assert "20%" in problems[0]
+    # compile-time growth past 50% fires independently of throughput
+    comp = {k: dict(v, compile_s=v["compile_s"] * 1.6)
+            for k, v in base.items()}
+    problems = check_regression(comp, base)
+    assert len(problems) == len(base)
+    assert all("compile_s" in p for p in problems)
+    # disjoint keys (bench never ran): explicit problem, not silent pass
+    assert check_regression({}, base) != []
+
+
+def test_fingerprint_mismatch_guard():
+    fp = {k: "x" for k in COMPARABLE_KEYS}
+    assert fingerprint_mismatches(fp, dict(fp)) == []
+    other = dict(fp, jax="y", cpus=999)      # cpus is NOT comparable
+    mism = fingerprint_mismatches(fp, other)
+    assert len(mism) == 1 and mism[0].startswith("jax:")
+
+
+def test_cli_selftest_proves_gate(tmp_path):
+    """The CI-blocking selftest: an injected 20% slowdown must trip the
+    15% gate (exit 0 = gate fired), and a sub-tolerance injection must
+    NOT (exit 1 = selftest correctly reports the gate as blind)."""
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps(
+        {"ts": 0, "fingerprint": {}, "metrics": extract_metrics(BENCH)}))
+    assert main(["selftest", "--baseline", str(baseline)]) == 0
+    assert main(["selftest", "--baseline", str(baseline),
+                 "--slowdown", "0.05"]) == 1
+
+
+def test_cli_check_and_append(tmp_path):
+    bench = tmp_path / "bench.json"
+    bench.write_text(json.dumps(BENCH))
+    baseline = tmp_path / "baseline.json"
+    history = tmp_path / "hist.jsonl"
+    assert main(["rebase", "--bench", str(bench),
+                 "--baseline", str(baseline)]) == 0
+    # same numbers vs own baseline: clean even under --strict
+    assert main(["check", "--bench", str(bench), "--baseline",
+                 str(baseline), "--strict"]) == 0
+    # regressed bench vs baseline: gate fails
+    slow = json.loads(json.dumps(BENCH))
+    node = slow["compute_r2_s8"]["4096"]["device"]["phases"]
+    node["clients_per_sec"] *= 0.5
+    bench.write_text(json.dumps(slow))
+    assert main(["check", "--bench", str(bench), "--baseline",
+                 str(baseline), "--strict"]) == 1
+    # fingerprint mismatch without --strict: advisory skip (exit 0)
+    doc = json.loads(baseline.read_text())
+    doc["fingerprint"]["jax"] = "0.0.0"
+    baseline.write_text(json.dumps(doc))
+    assert main(["check", "--bench", str(bench), "--baseline",
+                 str(baseline)]) == 0
+    # history rows accumulate with fingerprints
+    assert main(["append", "--bench", str(bench), "--history",
+                 str(history), "--note", "t"]) == 0
+    assert main(["append", "--bench", str(bench), "--history",
+                 str(history)]) == 0
+    rows = [json.loads(ln) for ln in
+            history.read_text().strip().splitlines()]
+    assert len(rows) == 2
+    assert rows[0]["note"] == "t"
+    assert all(set(r["fingerprint"]) >= set(COMPARABLE_KEYS)
+               for r in rows)

@@ -81,6 +81,8 @@ def _run_preset(name, strategy="paper", trace=None):
         "staleness_hist": [int(x) for x in tel.staleness_hist],
         "overflow_hwm": int(tel.overflow_hwm),
         "far_messages": int(tel.far_messages),
+        # op census (PR 9): exact per-op totals of the tick loop
+        "ops": {k: int(v) for k, v in tel.ops.items()},
     }
 
 
@@ -116,7 +118,7 @@ def test_golden_trajectory(name, strategy, regen_golden, tmp_path):
     # protocol and telemetry counts are integers: exact
     for k in ("rounds", "messages", "broadcasts", "participation",
               "bytes_up_total", "staleness_hist", "overflow_hwm",
-              "far_messages"):
+              "far_messages", "ops"):
         assert got[k] == want[k], (k, got[k], want[k])
     np.testing.assert_allclose(got["losses"], want["losses"],
                                rtol=RTOL, atol=ATOL)

@@ -206,3 +206,56 @@ def test_check_trace_accepts_lines_and_paths(tmp_path):
     p = tmp_path / "t.jsonl"
     p.write_text("\n".join(lines) + "\n")
     assert check_trace(str(p), d=2) == []       # path (where=path)
+
+
+# --- op-census + timeline discipline (INV-SPAN, PR 9) -------------------------
+
+def test_corrupt_segment_ops_regression(tmp_path):
+    """Per-segment op-census counters are cumulative; one regressing
+    entrywise means an increment site was rebuilt, not accumulated."""
+    path = _device_trace(tmp_path, d=3)
+    recs = read_trace(path)
+    segs = [r for r in recs if r["kind"] == "segment"]
+    assert segs[0]["ops"][0] > 0                # ticks counted
+    segs[-1]["ops"] = list(segs[-1]["ops"])
+    segs[-1]["ops"][0] = segs[0]["ops"][0] - 1  # below an earlier segment
+    assert "INV-SPAN" in _rules(check_trace(recs, d=3))
+
+
+def test_corrupt_report_ops_relations(tmp_path):
+    """Report op census inconsistent with the message counts fires
+    INV-SPAN (complete_ticks cannot exceed messages)."""
+    path = _device_trace(tmp_path, d=3)
+    recs = read_trace(path)
+    report = [r for r in recs if r["kind"] == "report"][0]
+    assert check_trace(recs, d=3) == []         # clean before corruption
+    report["ops"] = dict(report["ops"],
+                         complete_ticks=report["messages"] + 1)
+    found = check_trace(recs, d=3)
+    assert "INV-SPAN" in _rules(found)
+    assert any("complete_ticks" in v.message for v in found)
+
+
+def test_check_perfetto_overlap_and_shape(tmp_path):
+    from repro.analysis.invariants import check_perfetto
+    ok = {"traceEvents": [
+        {"ph": "X", "name": "a", "pid": 1, "tid": 1, "ts": 0, "dur": 5},
+        {"ph": "X", "name": "b", "pid": 1, "tid": 1, "ts": 5, "dur": 3},
+    ]}
+    assert check_perfetto(ok) == []
+    overlapping = {"traceEvents": [
+        {"ph": "X", "name": "a", "pid": 1, "tid": 1, "ts": 0, "dur": 5},
+        {"ph": "X", "name": "b", "pid": 1, "tid": 1, "ts": 3, "dur": 3},
+    ]}
+    found = check_perfetto(overlapping)
+    assert _rules(found) == ["INV-SPAN"]
+    missing_dur = {"traceEvents": [
+        {"ph": "X", "name": "a", "pid": 1, "tid": 1, "ts": 0}]}
+    assert _rules(check_perfetto(missing_dur)) == ["INV-SPAN"]
+    # path form: a real exported document checks clean
+    import json as _json
+    from repro.telemetry import trace_to_perfetto, write_perfetto
+    recs = _event_trace(d=2)
+    out = tmp_path / "trace.json"
+    write_perfetto(str(out), trace_to_perfetto(recs))
+    assert check_perfetto(str(out)) == []

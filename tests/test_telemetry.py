@@ -22,10 +22,13 @@ from repro.core import AsyncFLSimulator, LogRegTask
 from repro.data import make_binary_dataset
 from repro.dp import moments_epsilon, per_client_accounting
 from repro.scenarios import LatencyTable, Scenario
-from repro.telemetry import (HEADER_BYTES, STALE_BINS, JsonlTraceWriter,
-                             MetricsReport, PhaseTimer, build_report,
-                             model_flat_dim, participation_sizes,
-                             staleness_bin, update_msg_bytes)
+from repro.telemetry import (HEADER_BYTES, OP_NAMES, STALE_BINS,
+                             JsonlTraceWriter, MetricsReport, PhaseTimer,
+                             SpanRecorder, build_report, check_ops,
+                             cost_decomposition, model_flat_dim,
+                             participation_sizes, staleness_bin,
+                             trace_to_perfetto, update_msg_bytes,
+                             validate_trace_events, write_perfetto)
 
 
 def _task(n=300, d=12, seed=9, sample_seed=21, **kw):
@@ -105,6 +108,8 @@ def test_counters_bitwise_host_vs_device_geo_regional():
     assert sum(co["staleness_hist"][1:]) > 0
     # trajectory parity still holds alongside the counters
     assert r_co["final"]["loss"] == r_dv["final"]["loss"]
+    # the op census joins the bitwise contract (PR 9)
+    assert r_co["telemetry"].ops == r_dv["telemetry"].ops
 
 
 def test_overflow_hwm_parity_and_run_results():
@@ -131,6 +136,10 @@ def test_overflow_hwm_parity_and_run_results():
     assert 0 < r_dv["final"]["overflow_hwm"] \
         <= r_dv["final"]["overflow_slots"] == dv.engine.Q
     assert r_co["final"]["overflow_hwm"] == dvc["overflow_hwm"]
+    # far-tier op-census counters agree bitwise and actually fired
+    ops = r_dv["telemetry"].ops
+    assert r_co["telemetry"].ops == ops
+    assert ops["far_groups"] > 0 and ops["far_ticks"] > 0
 
 
 # --- staleness histogram semantics ------------------------------------------
@@ -287,7 +296,10 @@ def test_phase_timer_accumulates():
         pass
     assert t.counts["a"] == 2 and t.counts["b"] == 1
     d = t.as_dict()
-    assert set(d) == {"a_s", "b_s"} and all(v >= 0 for v in d.values())
+    # seconds per phase plus span counts (SpanRecorder.as_dict)
+    assert set(d) == {"a_s", "b_s", "a_n", "b_n"}
+    assert all(v >= 0 for v in d.values())
+    assert d["a_n"] == 2 and d["b_n"] == 1
 
 
 def test_engine_reports_carry_wall_phases():
@@ -308,3 +320,147 @@ def test_trace_writer_coerces_numpy():
     w.close()
     assert json.loads(buf.getvalue()) == \
         {"kind": "x", "a": 3, "b": [0, 1], "c": 0.5}
+
+
+# --- op census (PR 9) --------------------------------------------------------
+
+@pytest.mark.parametrize("preset,strategy", [
+    ("uniform", None),
+    ("mobile_diurnal", "fedasync"),
+    ("iot_straggler", "fedbuff"),
+])
+def test_op_census_bitwise_host_vs_device(preset, strategy):
+    """The op-census vector joins the bitwise parity contract on DP +
+    stochastic presets and every aggregation strategy."""
+    task = _task(dp_clip=1.0, dp_sigma=1.5)
+    kw = dict(n_clients=6, sizes_per_client=[4, 6, 8],
+              round_stepsizes=[0.1, 0.08, 0.06], d=2, seed=3, block=4,
+              scenario=preset, strategy=strategy)
+    r_co = CohortSimulator(task, **kw).run(max_rounds=3)
+    r_dv = DeviceCohortSimulator(task, **kw).run(max_rounds=3)
+    co, dv = r_co["telemetry"].ops, r_dv["telemetry"].ops
+    assert co == dv
+    assert tuple(co) == OP_NAMES
+    assert co["ticks"] == r_co["telemetry"].ticks > 0
+    assert co["block_ticks"] > 0 and co["complete_ticks"] > 0
+    # float trajectory is unperturbed by the counter threading
+    assert r_co["final"]["loss"] == r_dv["final"]["loss"]
+    # the check_ops relations hold on a real run, on both engines
+    for rep in (r_co["telemetry"], r_dv["telemetry"]):
+        assert check_ops(rep.ops, messages=rep.messages,
+                         broadcasts=rep.broadcasts,
+                         far_messages=rep.far_messages,
+                         clients=rep.clients, ticks=rep.ticks) == []
+
+
+def test_check_ops_flags_inconsistencies():
+    ops = dict.fromkeys(OP_NAMES, 0)
+    ops.update(ticks=10, block_ticks=11)            # gated > ticks
+    assert any("block_ticks" in p for p in check_ops(ops))
+    ops = dict.fromkeys(OP_NAMES, 0)
+    ops.update(ticks=10, complete_ticks=5)
+    assert any("complete_ticks" in p
+               for p in check_ops(ops, messages=3))
+    ops = dict.fromkeys(OP_NAMES, 0)
+    ops.update(ticks=10, far_ticks=4, far_groups=2)
+    assert any("far_ticks" in p
+               for p in check_ops(ops, far_messages=9))
+
+
+def test_cost_decomposition_roofline_ratio():
+    ops = dict.fromkeys(OP_NAMES, 0)
+    ops.update(ticks=20, block_ticks=5, ring_scatters=8)
+    dec = cost_decomposition(ops, steady_s=2.0)
+    assert dec["tick_overhead_ratio"] == pytest.approx(0.75)
+    assert dec["ring_scatters_per_tick"] == pytest.approx(0.4)
+    assert dec["s_per_tick"] == pytest.approx(0.1)
+    assert cost_decomposition({"ticks": 0}) == {}
+
+
+# --- span recorder + Perfetto export (PR 9) ---------------------------------
+
+def test_span_recorder_tracks_and_trace_events():
+    rec = SpanRecorder()
+    with rec.phase("steady", seg=1):
+        pass
+    with rec.phase("steady", seg=2):
+        pass
+    rec.add("compile", 0.25)
+    events = rec.to_trace_events()
+    doc = {"traceEvents": events}
+    assert validate_trace_events(doc) == []
+    slices = [e for e in events if e["ph"] == "X"]
+    assert len(slices) == 3
+    assert {e["name"] for e in slices} == {"steady", "compile"}
+    # re-entrant phases stay on one track, back to back, not stacked
+    assert len({(e["pid"], e["tid"]) for e in slices
+                if e["name"] == "steady"}) == 1
+
+
+def test_perfetto_event_trace_has_flows(tmp_path):
+    """Event-sim JSONL -> Perfetto: message lifecycles become flow
+    events on virtual-protocol time and the doc validates + round-trips
+    through json.load."""
+    task = _task()
+    buf = io.StringIO()
+    res = AsyncFLSimulator(task, n_clients=4, sizes_per_client=[4, 6],
+                           round_stepsizes=[0.1, 0.08], d=1, seed=0,
+                           scenario="uniform", trace=buf).run(max_rounds=2)
+    records = [json.loads(line) for line in
+               buf.getvalue().strip().splitlines()]
+    events = trace_to_perfetto(records)
+    out = tmp_path / "trace.json"
+    write_perfetto(str(out), events)
+    with open(out) as fh:
+        doc = json.load(fh)
+    assert validate_trace_events(doc) == []
+    phs = {e["ph"] for e in doc["traceEvents"]}
+    assert {"s", "f", "i", "M"} <= phs          # flows + instants
+    flows = [e for e in doc["traceEvents"] if e["ph"] in ("s", "f")]
+    assert len(flows) >= 2 * res["telemetry"].messages
+
+
+def test_perfetto_device_trace_segments(tmp_path):
+    """Device-engine JSONL (segment summaries) -> Perfetto slices on
+    the virtual clock, plus the run's wall spans, in one document."""
+    task = _task()
+    buf = io.StringIO()
+    sim = DeviceCohortSimulator(task, n_clients=4, sizes_per_client=[4, 6],
+                                round_stepsizes=[0.1, 0.08], d=1, seed=0,
+                                block=4, scenario="uniform", trace=buf)
+    sim.run(max_rounds=3, eval_every=1)
+    records = [json.loads(line) for line in
+               buf.getvalue().strip().splitlines()]
+    events = trace_to_perfetto(records)
+    events += sim.engine.timer.to_trace_events(process="wall")
+    # two processes may share builder-less ids; validate separately
+    assert validate_trace_events({"traceEvents": events},
+                                 check_overlap=False) == []
+    seg_slices = [e for e in events
+                  if e["ph"] == "X" and e.get("args", {}).get("ops")]
+    assert seg_slices, "segment slices should carry op-census args"
+
+
+def test_write_perfetto_rejects_malformed(tmp_path):
+    bad = [{"ph": "X", "name": "a", "pid": 1, "tid": 1, "ts": 0}]
+    with pytest.raises(ValueError):
+        write_perfetto(str(tmp_path / "bad.json"), bad)
+
+
+def test_telemetry_cli_capture_and_convert(tmp_path):
+    """ONE CLI invocation produces a Perfetto-loadable trace JSON."""
+    from repro.telemetry.__main__ import main
+    out = tmp_path / "timeline.json"
+    jl = tmp_path / "run.jsonl"
+    rc = main(["capture", "--engine", "event", "--rounds", "2",
+               "--clients", "4", "--out", str(out),
+               "--jsonl-out", str(jl)])
+    assert rc == 0
+    with open(out) as fh:
+        doc = json.load(fh)
+    assert doc["traceEvents"] and validate_trace_events(doc) == []
+    out2 = tmp_path / "converted.json"
+    assert main(["convert", str(jl), "--out", str(out2)]) == 0
+    with open(out2) as fh:
+        doc2 = json.load(fh)
+    assert validate_trace_events(doc2) == []
