@@ -49,7 +49,14 @@ L = next_pow2(max latency ticks) and the per-slot scatter unrolls with
 it) — recording ring length L, compile+warm seconds, and steady-state
 run seconds for each.
 
-A sixth workload (``aggregation_zoo``) runs the server-side
+A sixth workload (``fused_tick``) measures the device engine's tick
+coalescing: the FedSGD-shaped leg with ``fuse_ticks`` off ("before",
+one protocol tick per jitted while_loop iteration) vs on ("after",
+overhead-only ticks merged into compute iterations), recording the
+before/after iteration-based ``tick_overhead_ratio`` — the roofline
+acceptance number.
+
+A seventh workload (``aggregation_zoo``) runs the server-side
 aggregation strategies (``repro.core.strategies``: paper default,
 FedAsync constant/hinge/poly decay, FedBuff) head-to-head on the
 device engine under the scenario presets.  One seed per preset means
@@ -127,11 +134,15 @@ def _engine_phases(mk_sim, rounds: int, C: int) -> dict:
     decomposition (``cost``, incl. the roofline tick_overhead_ratio)."""
     compile_s = _time_run(mk_sim(), rounds)
     warmup_s = _time_run(mk_sim(), rounds)
-    times, tel = [], None
+    times, tel, iters = [], None, None
     for _ in range(REPS):
         sim = mk_sim()
         times.append(_time_run(sim, rounds))
         tel = sim.bench_result["telemetry"]
+        # device engine only: (loop_iters, block_iters) of the jitted
+        # while_loop — the tick-coalescing census the iteration-based
+        # tick_overhead_ratio is computed from
+        iters = getattr(sim.engine, "fused_iters", None)
     steady_s = statistics.median(times)
     out = {
         "sec": steady_s,
@@ -141,9 +152,11 @@ def _engine_phases(mk_sim, rounds: int, C: int) -> dict:
                    "clients_per_sec": C / steady_s},
     }
     if tel is not None and tel.ops:
+        li, bi = iters if iters is not None else (None, None)
         out["ops"] = dict(tel.ops)
         out["cost"] = cost_decomposition(tel.ops, steady_s=steady_s,
-                                         ticks=tel.ticks)
+                                         ticks=tel.ticks,
+                                         loop_iters=li, block_iters=bi)
     return out
 
 
@@ -393,6 +406,49 @@ def run_aggregation_zoo(report=None, grid_path=None):
     return rows
 
 
+def run_fused_tick(report=None, ctasks=None):
+    """Tick-coalescing workload: the FedSGD-shaped device leg run with
+    ``fuse_ticks=False`` ("before": one protocol tick per while_loop
+    iteration, the PR-9 behavior) and ``fuse_ticks=True`` ("after":
+    overhead-only ticks ride along with compute iterations).  Emits the
+    before/after iteration-based ``tick_overhead_ratio`` — the roofline
+    acceptance number — into BENCH_cohort.json."""
+    rounds = 8
+    kw = dict(sizes_per_client=[1] * rounds,
+              round_stepsizes=[0.1] * rounds, d=1, seed=0)
+    own_report = report is None
+    report = {} if own_report else report
+    if ctasks is None:
+        X, y = make_binary_dataset(2_048, 32, seed=0, noise=0.3)
+        ctasks = {C: as_cohort_task(_mk_task(X, y), C) for C in COHORTS}
+    report["fused_tick"] = {}
+    rows = []
+    dv_cfg = FLConfig(engine="device", cohort_block=64)
+    for C in COHORTS:
+        co_task = ctasks[C]
+        legs = {}
+        for lname, fuse in (("before", False), ("after", True)):
+            legs[lname] = _engine_phases(
+                lambda: make_simulator(dv_cfg, co_task, n_clients=C,
+                                       fuse_ticks=fuse, **kw),
+                rounds, C)
+        before = legs["before"]["cost"]["tick_overhead_ratio"]
+        after = legs["after"]["cost"]["tick_overhead_ratio"]
+        report["fused_tick"][str(C)] = {
+            "clients": C, "rounds": rounds, "iters_per_round": 1,
+            "before": legs["before"], "after": legs["after"],
+            "tick_overhead_ratio_before": before,
+            "tick_overhead_ratio_after": after,
+        }
+        rows.append((f"cohort_scale_fused_tick_C{C}",
+                     legs["after"]["sec"] * 1e6,
+                     f"tick_overhead_ratio {before:.2f} -> {after:.2f}; "
+                     f"steady {legs['after']['sec'] * 1e3:.1f}ms"))
+    if own_report:
+        _merge_write(report)
+    return rows
+
+
 def run():
     X, y = make_binary_dataset(2_048, 32, seed=0, noise=0.3)
     rows, report = [], {}
@@ -452,6 +508,7 @@ def run():
             rows.append((f"cohort_scale_{wname}_C{C}", dv["sec"] * 1e6,
                          derived))
 
+    rows += run_fused_tick(report, ctasks)
     rows += run_model_scale(report)
     rows += run_scenarios(report)
     rows += run_heavy_tail(report)

@@ -59,8 +59,9 @@ LAT_SALT = _declare(
     sites=("repro.scenarios.registry",))
 TABLE_SALT = _declare(
     "TABLE_SALT", 0x7AB1E,
-    chain="numpy stream for drawn per-client latency-table assignments "
-          "(TableAssignment kind='draw')",
+    chain="drawn per-client latency-table assignments: per-client "
+          "fold_in uniforms inverted through the weight CDF "
+          "(draw_table_ids, jit-rederivable on every host)",
     sites=("repro.scenarios.registry",))
 AVAIL_SALT = _declare(
     "AVAIL_SALT", 0xA7A1B,
@@ -77,9 +78,10 @@ REGION_SALT = _declare(
     sites=("repro.scenarios.availability",))
 RENEW_SALT = _declare(
     "RENEW_SALT", 0x9E4A1,
-    chain="renewal churn: per-(epoch, client) holding-time draws (cohort "
-          "tick approximation) and the event sim's per-client numpy "
-          "renewal streams",
+    chain="renewal churn: per-(epoch, client) holding-time draws "
+          "(_renewal_epoch_draw), consumed by BOTH the cohort tick "
+          "masks and the event sim's renewal windows (path-wise "
+          "alignment)",
     sites=("repro.scenarios.availability",))
 SPEED_SALT = _declare(
     "SPEED_SALT", 0x5BEED,

@@ -69,15 +69,17 @@ from repro.analysis.salts import NOISE_SALT
 from repro.cohort.state import (FRAC_BITS, DeviceCohortState,
                                 default_max_ticks, next_pow2, pad_sizes,
                                 speed_accrual)
-from repro.core.strategies import get_strategy
+from repro.core.strategies import get_strategy, ring_decay
 from repro.kernels.cohort_dp import cohort_clip_noise
+from repro.kernels.tick_fused import (bucket_apply, tick_deliver,
+                                      tick_scatter)
 from repro.scenarios import (get_scenario, legacy_latency_scenario,
                              scenario_plan)
 from repro.sharding import cohort_mesh, cohort_shardings
 from repro.telemetry import (STALE_BINS, PhaseTimer, build_report,
                              open_trace, update_msg_bytes)
-from repro.telemetry.costs import (N_OPS, OP_FAR_GROUPS, OP_FAR_TICKS,
-                                   OP_RING_SCATTERS)
+from repro.telemetry.costs import (N_OPS, OP_BLOCK_TICKS, OP_FAR_GROUPS,
+                                   OP_FAR_TICKS, OP_RING_SCATTERS)
 
 # Unroll bound for the overflow bucket's per-completion-tick far-group
 # loop: one iteration per distinct far arrival tick.  Most tables have a
@@ -93,7 +95,8 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                    d_gate: int, L: int, R: int, B: int, Q: int, F: int,
                    plan, dp_clip: float, dp_sigma: float,
                    dp_round_clip: float, use_dp_kernel: bool,
-                   interpret: bool, seed: int, strategy):
+                   interpret: bool, in_kernel_rng: bool,
+                   fuse_ticks: bool, seed: int, strategy):
     """Compile the eval-boundary segment runner for one configuration.
 
     Returns ``segment(state, etas, sizes, accrual, target_k, tick_limit)``
@@ -105,6 +108,7 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
     """
     dp_on = dp_sigma > 0.0 or dp_round_clip > 0.0
     noise_scale = dp_clip * dp_sigma
+    ones1 = jnp.ones((1,), jnp.float32)   # unit decay for [1, D] buckets
     # server-side aggregation strategy (repro.core.strategies), resolved
     # at trace time: the paper default applies the due [D] bucket as-is;
     # FedAsync keeps a sender-k-stratified [R, D] twin of each bucket
@@ -193,17 +197,17 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                     st.ovf_vec, st.ovf_at, st.ovf_cnt, st.ovf_ks)
                 ovf_kvec = st.ovf_kvec
             has_arrivals = jnp.sum(cnt_total) > 0
+            # bucket apply — fused kernel (kernels/tick_fused): on CPU
+            # its reference path traces the engines' historical
+            # expressions verbatim (bit parity with _make_strat_apply /
+            # v - arr_due); on TPU/GPU it is one Pallas pass over D
             if stratified:
                 # FedAsync: decay each sender-k stratum of the due
-                # bucket by its staleness — the IDENTICAL expression
-                # the host engine jits in _make_strat_apply
-                tau_a = ((st.server_k - jnp.arange(R, dtype=jnp.int32))
-                         & (R - 1))
-                dec = strategy.decay_weights(tau_a)
-                v = jnp.where(has_arrivals,
-                              st.v - jnp.sum(kvec_due * dec[:, None],
-                                             axis=0),
-                              st.v)
+                # bucket by its staleness — ring_decay is the SHARED
+                # expression the host engine jits in _make_strat_apply;
+                # here the weights feed the kernel as an operand
+                dec = ring_decay(strategy, st.server_k, R)
+                v = bucket_apply(st.v, kvec_due, dec, has_arrivals)
                 buf_vec, buf_cnt = st.buf_vec, st.buf_cnt
             elif buffered:
                 # FedBuff: bank the due bucket, flush (and reset) on
@@ -213,13 +217,14 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                                     st.buf_vec + arr_due, st.buf_vec)
                 buf_cnt = st.buf_cnt + jnp.sum(cnt_total)
                 flush = buf_cnt >= BUF
-                v = jnp.where(flush, st.v - buf_vec, st.v)
+                v = bucket_apply(st.v, buf_vec[None, :], ones1, flush)
                 buf_vec = jnp.where(flush,
                                     jnp.zeros((D,), jnp.float32),
                                     buf_vec)
                 buf_cnt = jnp.where(flush, 0, buf_cnt)
             else:
-                v = jnp.where(has_arrivals, st.v - arr_due, st.v)
+                v = bucket_apply(st.v, arr_due[None, :], ones1,
+                                 has_arrivals)
                 buf_vec, buf_cnt = st.buf_vec, st.buf_cnt
             upd_vec = st.upd_vec.at[slot].set(
                 jnp.zeros((D,), jnp.float32))
@@ -269,8 +274,10 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                 best = jnp.argmax(cand, axis=0)                    # [C]
                 best_k = jnp.max(cand, axis=0)
                 take = best_k > st.k
-                w = jnp.where(take[:, None],
-                              bc_v[best] - eta[:, None] * st.U, st.w)
+                # fused gather+receive (kernels/tick_fused): the ring
+                # gather and the masked ISRRECEIVE in one [C, D] pass;
+                # CPU reference = bc_v[best] - eta*U verbatim
+                w = tick_deliver(st.w, st.U, bc_v, best, take, eta)
                 return w, jnp.where(take, best_k, st.k)
 
             w, k = lax.cond(jnp.any(elig), do_deliver,
@@ -338,10 +345,8 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                     noised, _ = cohort_clip_noise(
                         U, nk, eta * done.astype(jnp.float32), done,
                         clip=dp_round_clip, noise_scale=noise_scale,
-                        use_kernel=use_dp_kernel, interpret=interpret)
-                    # client-side consistency (Algorithm 1 line 24)
-                    w = jnp.where(done[:, None],
-                                  w + eta[:, None] * (noised - U), w)
+                        use_kernel=use_dp_kernel, interpret=interpret,
+                        in_kernel_rng=in_kernel_rng)
                     sent = noised
                 else:
                     sent = U
@@ -353,41 +358,39 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                 # ring (and its unrolled scatter) stays bounded by the
                 # plan's ring_ticks, not the latency tail
                 near = done & (arr_off < L) if F > 0 else done
-                # unrolled masked sums, NOT a scatter-add: each slot's
-                # vector must be the host engine's _weighted_sum over the
-                # full client axis (same expression, same float add
-                # order) or host<->device bit parity breaks.  FedAsync
-                # stratifies by the sender's freshest-seen k (mod R)
-                # instead, mirroring the host's _make_strat_insert row
-                # loop — rows with no arrivals keep their old value
-                # bitwise (guarded add, not old + 0).
+                # ring scatter + DP w-consistency (Algorithm 1 line 24)
+                # + U reset in ONE fused kernel call.  The per-row
+                # masks / eta weights are the engines' historical
+                # expressions precomputed as operands; the kernel's
+                # reference path keeps each slot the host engine's
+                # _weighted_sum over the full client axis under the
+                # guarded add (rows with no arrivals stay bitwise
+                # untouched — not old + 0), so host<->device bit parity
+                # is unchanged.  FedAsync stratifies by the sender's
+                # freshest-seen k (mod R): its [L, R, D] bucket
+                # flattens to L*R scatter rows (sl-major, matching the
+                # host's _make_strat_insert row loop).
                 kmod = k & (R - 1) if stratified else None
-                ring_sc = jnp.int32(0)    # distinct near slots scattered
+                in_ls = [near & (arr_slot == sl) for sl in range(L)]
                 if stratified:
-                    for sl in range(L):
-                        in_l = near & (arr_slot == sl)
-                        ring_sc = ring_sc + jnp.any(in_l).astype(jnp.int32)
-                        for r in range(R):
-                            in_lr = in_l & (kmod == r)
-                            vec = jnp.sum(
-                                sent * (eta * in_lr.astype(
-                                    jnp.float32))[:, None],
-                                axis=0)
-                            upd_kvec = upd_kvec.at[sl, r].set(
-                                jnp.where(jnp.any(in_lr),
-                                          upd_kvec[sl, r] + vec,
-                                          upd_kvec[sl, r]))
+                    masks = [in_l & (kmod == r)
+                             for in_l in in_ls for r in range(R)]
+                    rows = upd_kvec.reshape((L * R, D))
                 else:
-                    for sl in range(L):
-                        in_l = near & (arr_slot == sl)
-                        ring_sc = ring_sc + jnp.any(in_l).astype(jnp.int32)
-                        vec = jnp.sum(
-                            sent
-                            * (eta * in_l.astype(jnp.float32))[:, None],
-                            axis=0)
-                        upd_vec = upd_vec.at[sl].set(
-                            jnp.where(jnp.any(in_l), upd_vec[sl] + vec,
-                                      upd_vec[sl]))
+                    masks = in_ls
+                    rows = upd_vec
+                # distinct near slots scattered
+                ring_sc = jnp.sum(jnp.stack(
+                    [jnp.any(in_l) for in_l in in_ls]).astype(jnp.int32))
+                wgt = jnp.stack([eta * m.astype(jnp.float32)
+                                 for m in masks])                  # [G, C]
+                any_g = jnp.stack([jnp.any(m) for m in masks])     # [G]
+                w, U, rows = tick_scatter(sent, w, U, rows, wgt,
+                                          any_g, done, eta, dp_on=dp_on)
+                if stratified:
+                    upd_kvec = rows.reshape((L, R, D))
+                else:
+                    upd_vec = rows
                 oh_l = ((arr_slot[:, None] == jnp.arange(L)[None, :])
                         & near[:, None]).astype(jnp.int32)         # [C, L]
                 oh_r = ((st.i & (R - 1))[:, None]
@@ -492,7 +495,6 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                         jnp.any(far_mask), do_far, lambda fops: fops,
                         (ovf_vec, ovf_at, ovf_cnt, ovf_ks, ovf_kvec,
                          ovf_hwm, err, op_census))
-                U = jnp.where(done[:, None], 0.0, sent)
                 return (w, U, upd_vec, upd_cnt, upd_ks, upd_kvec,
                         ovf_vec, ovf_at, ovf_cnt, ovf_ks, ovf_kvec,
                         ovf_hwm, far_msgs, err, op_census)
@@ -519,12 +521,62 @@ def _build_segment(ctask, *, C: int, D: int, block: int, b_stat: int,
                 stale_hist=stale_hist, upd_ks=upd_ks, ovf_ks=ovf_ks,
                 ovf_hwm=ovf_hwm, far_msgs=far_msgs, upd_kvec=upd_kvec,
                 ovf_kvec=ovf_kvec, buf_vec=buf_vec, buf_cnt=buf_cnt,
-                ops=op_census)
+                ops=op_census, iters=st.iters)
+
+        def predict_block(s):
+            """Int-only preview of tick s.tick + 1's block predicate.
+
+            Mirrors the deliver-k advance and credit accrual on the
+            PRE-tick broadcast state; a cascade fired by the next tick
+            itself (same-tick delivery) can make this wrong, which only
+            shifts which iteration a block tick lands in — the merged
+            tick is the full tick_fn, so the protocol state, the ops
+            census, and the relations block_iters <= loop_iters <=
+            ticks are exact regardless.
+            """
+            T = s.tick + 1
+            elig2 = (s.bc_at <= T) & (s.bc_k[:, None] > s.k[None, :])
+            best_k2 = jnp.max(jnp.where(elig2, s.bc_k[:, None], 0),
+                              axis=0)
+            k2 = jnp.where(best_k2 > s.k, best_k2, s.k)
+            active2 = s.i < k2 + d_gate
+            if avail_mask is not None:
+                active2 = active2 & avail_mask(T)
+            credit2 = s.credit + jnp.where(active2, accrual, 0)
+            s_i2 = sizes[cidx, jnp.minimum(s.i, sizes.shape[1] - 1)]
+            n2 = jnp.where(active2,
+                           jnp.minimum(s_i2 - s.h,
+                                       credit2 >> FRAC_BITS), 0)
+            return jnp.any(jnp.maximum(n2, 0) > 0)
+
+        def loop_body(st0: DeviceCohortState) -> DeviceCohortState:
+            # tick coalescing (fuse_ticks): run the tick, and when the
+            # NEXT tick (a) would run under the loop condition anyway
+            # and (b) is predicted to do no client compute, run it in
+            # the same while_loop iteration.  The merged tick is the
+            # SAME tick_fn under the same condition the unfused loop
+            # would have evaluated, so the tick sequence — and every
+            # protocol/census counter — is identical bitwise; only the
+            # iteration attribution in ``iters`` changes.  Overhead-only
+            # ticks thus ride along with compute iterations instead of
+            # costing a loop step of their own.
+            st1 = tick_fn(st0)
+            if fuse_ticks:
+                merge = ((st1.server_k < target_k)
+                         & (st1.tick < tick_limit) & (st1.err == 0)
+                         & ~predict_block(st1))
+                st2 = lax.cond(merge, tick_fn, lambda s: s, st1)
+            else:
+                st2 = st1
+            had_block = (st2.ops[OP_BLOCK_TICKS]
+                         > st0.ops[OP_BLOCK_TICKS]).astype(jnp.int32)
+            return st2._replace(
+                iters=st0.iters + jnp.stack([jnp.int32(1), had_block]))
 
         return lax.while_loop(
             lambda s: ((s.server_k < target_k) & (s.tick < tick_limit)
                        & (s.err == 0)),
-            tick_fn, st)
+            loop_body, st)
 
     return jax.jit(segment, donate_argnums=(0,))
 
@@ -539,8 +591,9 @@ class DeviceCohortEngine:
                  latency=None, seed: int = 0, block: int = 64,
                  dp_sigma: float = 0.0, dp_clip: float = 0.0,
                  dp_round_clip: float = 0.0, use_dp_kernel: bool = True,
-                 interpret: bool = True, scenario=None, trace=None,
-                 dp_delta: float = 1e-5, strategy=None):
+                 interpret: Optional[bool] = None, scenario=None,
+                 trace=None, dp_delta: float = 1e-5, strategy=None,
+                 dp_rng: str = "operand", fuse_ticks: bool = True):
         self.ctask = ctask
         C = ctask.C
         self.C = C
@@ -574,7 +627,30 @@ class DeviceCohortEngine:
         self.dp_clip = float(dp_clip)
         self.dp_round_clip = float(dp_round_clip)
         self.use_dp_kernel = bool(use_dp_kernel)
-        self.interpret = bool(interpret)
+        # interpret=None: infer from the backend — interpret-mode Pallas
+        # on CPU (byte-identical to the historical default there), the
+        # compiled kernel on a real TPU/GPU
+        self.interpret = ((jax.default_backend() == "cpu")
+                          if interpret is None else bool(interpret))
+        # DP noise source: "operand" streams jax.random normals into the
+        # clip+noise kernel (bitwise host-vs-device, the parity/golden
+        # contract); "in_kernel" draws via pltpu.prng_random_bits inside
+        # the kernel (TPU only — no HBM noise block, distributionally
+        # equivalent, pinned by a chi-square test instead of bitwise)
+        if dp_rng not in ("operand", "in_kernel"):
+            raise ValueError(f"dp_rng={dp_rng!r} not in "
+                             f"('operand', 'in_kernel')")
+        if dp_rng == "in_kernel":
+            if jax.default_backend() != "tpu":
+                raise ValueError(
+                    "dp_rng='in_kernel' needs a TPU backend: the "
+                    "pltpu.prng_random_bits kernel has no CPU/GPU "
+                    "lowering (use dp_rng='operand')")
+            if not self.use_dp_kernel:
+                raise ValueError("dp_rng='in_kernel' requires "
+                                 "use_dp_kernel=True")
+        self.dp_rng = dp_rng
+        self.fuse_ticks = bool(fuse_ticks)
         self.dp_delta = float(dp_delta)
         self._trace = open_trace(trace)
 
@@ -649,7 +725,8 @@ class DeviceCohortEngine:
             buf_vec=jnp.zeros((D,) if self.strategy.buffered else (1,),
                               jnp.float32),
             buf_cnt=jnp.int32(0),
-            ops=jnp.zeros((N_OPS,), jnp.int32))
+            ops=jnp.zeros((N_OPS,), jnp.int32),
+            iters=jnp.zeros((2,), jnp.int32))
         return DeviceCohortState(**{
             f: jax.device_put(val, self._shardings[f])
             for f, val in fields.items()})
@@ -660,7 +737,8 @@ class DeviceCohortEngine:
                self.d_gate, self.L, self.R, self.B, self.Q,
                self._plan.fingerprint(), self.dp_clip, self.dp_sigma,
                self.dp_round_clip, self.use_dp_kernel, self.interpret,
-               self.seed, self.strategy.fingerprint())
+               self.dp_rng, self.fuse_ticks, self.seed,
+               self.strategy.fingerprint())
         cache = getattr(self.ctask, "_segment_fns", None)
         if cache is None:
             cache = self.ctask._segment_fns = {}
@@ -673,9 +751,19 @@ class DeviceCohortEngine:
                 plan=self._plan, dp_clip=self.dp_clip,
                 dp_sigma=self.dp_sigma, dp_round_clip=self.dp_round_clip,
                 use_dp_kernel=self.use_dp_kernel,
-                interpret=self.interpret, seed=self.seed,
+                interpret=self.interpret,
+                in_kernel_rng=(self.dp_rng == "in_kernel"),
+                fuse_ticks=self.fuse_ticks, seed=self.seed,
                 strategy=self.strategy)
         return fn
+
+    @property
+    def fused_iters(self):
+        """(loop_iters, block_iters): while_loop iterations executed and
+        how many contained a block tick — the tick-coalescing census the
+        bench's ``tick_overhead_ratio`` is computed from (syncs)."""
+        it = np.asarray(self.state.iters)
+        return int(it[0]), int(it[1])
 
     @property
     def total_messages(self) -> int:

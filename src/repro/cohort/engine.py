@@ -43,7 +43,7 @@ from repro.analysis.salts import NOISE_SALT
 from repro.cohort.state import (FRAC_BITS, BroadcastRing, CohortState,
                                 UpdateBuckets, default_max_ticks,
                                 next_pow2, pad_sizes, speed_accrual)
-from repro.core.strategies import get_strategy
+from repro.core.strategies import get_strategy, ring_decay
 from repro.kernels.cohort_dp import cohort_clip_noise
 from repro.scenarios import get_scenario, scenario_plan
 from repro.telemetry import (STALE_BINS, PhaseTimer, build_report,
@@ -97,12 +97,12 @@ def _add_scaled_rows(w, delta, eta, mask):
 def _make_strat_apply(strategy, R: int):
     """Stratified (FedAsync) apply: decay each sender-k row of the
     [R, D] bucket by its staleness against the pre-cascade server_k.
-    The device engine evaluates the IDENTICAL expression inside its
-    tick, so the two engines' decayed sums are bitwise equal."""
+    The device engine consumes the SAME ``ring_decay`` weights (as the
+    fused bucket-apply kernel's operand), so the two engines' decayed
+    sums are bitwise equal."""
     @jax.jit
     def apply(v, total, server_k):
-        tau = (server_k - jnp.arange(R, dtype=jnp.int32)) & (R - 1)
-        dec = strategy.decay_weights(tau)
+        dec = ring_decay(strategy, server_k, R)
         return v - jnp.sum(total * dec[:, None], axis=0)
     return apply
 
@@ -131,7 +131,8 @@ class CohortEngine:
                  latency_fn: Optional[Callable] = None, seed: int = 0,
                  block: int = 64, dp_sigma: float = 0.0,
                  dp_clip: float = 0.0, dp_round_clip: float = 0.0,
-                 use_dp_kernel: bool = True, interpret: bool = True,
+                 use_dp_kernel: bool = True,
+                 interpret: Optional[bool] = None,
                  scenario=None, trace=None, dp_delta: float = 1e-5,
                  strategy=None):
         self.ctask = ctask
@@ -186,7 +187,11 @@ class CohortEngine:
         self.dp_clip = float(dp_clip)
         self.dp_round_clip = float(dp_round_clip)
         self.use_dp_kernel = bool(use_dp_kernel)
-        self.interpret = bool(interpret)
+        # interpret=None: infer from the backend — interpret-mode Pallas
+        # on CPU (byte-identical to the historical default there), the
+        # compiled kernel on a real TPU/GPU
+        self.interpret = ((jax.default_backend() == "cpu")
+                          if interpret is None else bool(interpret))
         self.noise_base = jax.random.PRNGKey(seed ^ NOISE_SALT)
 
         # server-side aggregation strategy (repro.core.strategies):

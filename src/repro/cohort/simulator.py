@@ -27,7 +27,8 @@ class CohortSimulator:
                  speeds: Optional[Sequence[float]] = None,
                  latency_fn: Optional[Callable] = None, seed: int = 0,
                  block: int = 64, dp_round_clip: float = 0.0,
-                 use_dp_kernel: bool = True, interpret: bool = True,
+                 use_dp_kernel: bool = True,
+                 interpret: Optional[bool] = None,
                  scenario=None, trace=None, dp_delta: float = 1e-5,
                  strategy=None):
         self.task = task
@@ -74,8 +75,9 @@ class DeviceCohortSimulator:
                  speeds: Optional[Sequence[float]] = None,
                  latency=None, seed: int = 0, block: int = 64,
                  dp_round_clip: float = 0.0, use_dp_kernel: bool = True,
-                 interpret: bool = True, scenario=None, trace=None,
-                 dp_delta: float = 1e-5, strategy=None):
+                 interpret: Optional[bool] = None, scenario=None,
+                 trace=None, dp_delta: float = 1e-5, strategy=None,
+                 dp_rng: str = "operand", fuse_ticks: bool = True):
         self.task = task
         self.ctask = as_cohort_task(task, n_clients, seed=seed)
         src_task = getattr(task, "task", task)
@@ -88,7 +90,7 @@ class DeviceCohortSimulator:
             dp_round_clip=dp_round_clip,
             use_dp_kernel=use_dp_kernel, interpret=interpret,
             scenario=scenario, trace=trace, dp_delta=dp_delta,
-            strategy=strategy)
+            strategy=strategy, dp_rng=dp_rng, fuse_ticks=fuse_ticks)
 
     @property
     def server_model(self):

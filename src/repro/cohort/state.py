@@ -195,6 +195,12 @@ class DeviceCohortState(NamedTuple):
     # lax.cond operand tuples as the census so the float math is
     # untouched; host engine mirrors it bitwise.
     ops: Any               # [N_OPS]   i32 op-census counters
+    # fused-loop iteration census (repro.cohort.device fuse_ticks):
+    # [loop_iters, block_iters] — while_loop iterations executed and how
+    # many of them contained at least one block tick.  Protocol-neutral:
+    # the ops census above still counts TICKS, this counts ITERATIONS
+    # after tick coalescing, so block_iters <= loop_iters <= ticks.
+    iters: Any             # [2]       i32 [loop_iters, block_iters]
 
 
 @dataclass

@@ -49,6 +49,22 @@ from typing import Any, Tuple
 import jax.numpy as jnp
 
 
+def ring_decay(strategy, server_k, R: int):
+    """[R] decay weights for the sender-k ring strata at server counter
+    ``server_k``: stratum r holds updates sent against broadcast counter
+    ``r (mod R)``, so its staleness is ``(server_k - r) mod R`` — exact
+    because the wait gate bounds true staleness by d - 1 < R.
+
+    This is THE apply-time decay expression of the stratified engines:
+    the host engine's ``_make_strat_apply`` and the device tick (where
+    the weights feed the fused bucket-apply kernel as an operand) both
+    call it, which is what keeps host-vs-device bitwise on every
+    strategy.
+    """
+    tau = (server_k - jnp.arange(R, dtype=jnp.int32)) & (R - 1)
+    return strategy.decay_weights(tau)
+
+
 class AggregationStrategy:
     """Base class AND the paper's default apply-on-dequeue rule."""
 

@@ -23,7 +23,7 @@ from repro.kernels.cohort_dp.ref import cohort_clip_noise_ref
                                              "interpret", "in_kernel_rng"))
 def cohort_clip_noise(u, key, weights, mask, *, clip: float = 0.0,
                       noise_scale: float = 0.0, d_block: int = 128,
-                      use_kernel: bool = True, interpret: bool = True,
+                      use_kernel: bool = True, interpret=None,
                       in_kernel_rng: bool = False):
     """u: (C, D) round updates -> (noised rows (C, D), weighted agg (D,)).
 
@@ -32,8 +32,13 @@ def cohort_clip_noise(u, key, weights, mask, *, clip: float = 0.0,
     multiplier on the standard-normal draw (protocol: dp_clip * dp_sigma).
     With ``in_kernel_rng`` the noise is drawn inside the kernel (TPU only,
     distributionally equivalent but not bit-matching the operand path).
+    ``interpret=None`` infers interpret mode from ``jax.default_backend()``
+    — interpret on CPU (byte-identical to the historical default there),
+    the compiled kernel on a real TPU/GPU.
     """
     C, D = u.shape
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
     if interpret and not in_kernel_rng:
         # CPU/interpret path has no 128-lane constraint: shrink the tile
         # to the model dim's power-of-two so a small D (e.g. the paper's

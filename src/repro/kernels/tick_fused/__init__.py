@@ -1,0 +1,18 @@
+"""Fused device-tick kernels: delivery gather, bucket apply, ring scatter.
+
+Pallas kernels over the [C, D] client block with pure-jnp references
+(`ref.py`) that mirror the device engine's historical expressions
+bitwise.  Dispatch (`ops.py`) routes to the reference on CPU and to the
+kernels on TPU/GPU, so the host-vs-device parity contract is preserved
+by construction on the backend the goldens pin.
+"""
+from repro.kernels.tick_fused.ops import (bucket_apply, tick_deliver,
+                                          tick_scatter)
+from repro.kernels.tick_fused.ref import (bucket_apply_ref,
+                                          tick_deliver_ref,
+                                          tick_scatter_ref)
+
+__all__ = [
+    "bucket_apply", "tick_deliver", "tick_scatter",
+    "bucket_apply_ref", "tick_deliver_ref", "tick_scatter_ref",
+]

@@ -1,0 +1,165 @@
+"""Fused device-tick Pallas kernels (TPU target).
+
+Three kernels over the [C, D] client block, one per tick pass the
+device engine historically ran as separate XLA ops.  The apply →
+cascade → deliver data dependency (the cascade writes the post-apply
+server vector into the broadcast ring that delivery then gathers from)
+forces the three-way split; within each kernel the gather, the bucket
+reduction, and the ring scatter fuse with their masks and stepsize
+scaling so the [C, D] traffic is a single HBM pass.
+
+Grid: D tiles only (``grid=(nd,)``).  The client axis is deliberately
+NOT tiled — every reduction over clients keeps the engines' historical
+full-axis ``jnp.sum`` order, which the bitwise host-vs-device parity
+contract pins.  Ring axes (B broadcast slots, G scatter rows) are
+small powers of two and unroll as Python loops: the broadcast gather
+is a select-accumulate (pure selection, no float sums, bitwise equal
+to ``bc_v[best]``) and each scatter row is a static store.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bucket_apply_kernel(v_ref, rows_ref, dec_ref, flag_ref, out_ref, *,
+                         single: bool):
+    v = v_ref[...]
+    rows = rows_ref[...]
+    dec = dec_ref[...]
+    if single:
+        # size-1 bucket: scale-by-weight, not a sum — jnp.sum over a
+        # size-1 axis computes 0.0 + x and flips a -0.0 row
+        contrib = rows[0] * dec[0]
+    else:
+        contrib = jnp.sum(rows * dec[:, None], axis=0)
+    out_ref[...] = jnp.where(flag_ref[0] != 0, v - contrib, v)
+
+
+def _tick_deliver_kernel(w_ref, u_ref, bc_ref, best_ref, take_ref,
+                         eta_ref, out_ref, *, B: int):
+    w = w_ref[...]
+    bc = bc_ref[...]
+    best = best_ref[...]
+    gathered = jnp.zeros_like(w)
+    for b in range(B):
+        gathered = jnp.where((best == b)[:, None], bc[b][None, :],
+                             gathered)
+    take = take_ref[...] != 0
+    out_ref[...] = jnp.where(take[:, None],
+                             gathered - eta_ref[...][:, None] * u_ref[...],
+                             w)
+
+
+def _tick_scatter_kernel(sent_ref, w_ref, u_ref, upd_ref, wgt_ref,
+                         any_ref, done_ref, eta_ref, w_out, u_out,
+                         upd_out, *, G: int, dp_on: bool):
+    sent = sent_ref[...]
+    wgt = wgt_ref[...]
+    any_g = any_ref[...]
+    upd = upd_ref[...]
+    for g in range(G):
+        vec = jnp.sum(sent * wgt[g][:, None], axis=0)
+        upd_out[g, :] = jnp.where(any_g[g] != 0, upd[g] + vec, upd[g])
+    done = done_ref[...] != 0
+    if dp_on:
+        w_out[...] = jnp.where(
+            done[:, None],
+            w_ref[...] + eta_ref[...][:, None] * (sent - u_ref[...]),
+            w_ref[...])
+    else:
+        w_out[...] = w_ref[...]
+    u_out[...] = jnp.where(done[:, None], jnp.zeros_like(sent), sent)
+
+
+def bucket_apply_kernel(v, rows, dec, flag, *, d_block: int = 512,
+                        interpret: bool = True):
+    """v: (D,), rows: (A, D), dec: (A,), flag: (1,) int32; D % d_block == 0.
+
+    Returns the updated server vector (D,).
+    """
+    A, D = rows.shape
+    assert D % d_block == 0, (D, d_block)
+    nd = D // d_block
+    return pl.pallas_call(
+        functools.partial(_bucket_apply_kernel, single=(A == 1)),
+        grid=(nd,),
+        in_specs=[
+            pl.BlockSpec((d_block,), lambda d: (d,)),
+            pl.BlockSpec((A, d_block), lambda d: (0, d)),
+            pl.BlockSpec((A,), lambda d: (0,)),
+            pl.BlockSpec((1,), lambda d: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d_block,), lambda d: (d,)),
+        out_shape=jax.ShapeDtypeStruct((D,), jnp.float32),
+        interpret=interpret,
+    )(v, rows, dec, flag)
+
+
+def tick_deliver_kernel(w, U, bc_v, best, take, eta, *,
+                        d_block: int = 512, interpret: bool = True):
+    """w, U: (C, D); bc_v: (B, D); best, take: (C,) int32; eta: (C,).
+
+    C % 8 == 0, D % d_block == 0.  Returns the updated weights (C, D).
+    """
+    C, D = w.shape
+    B = bc_v.shape[0]
+    assert D % d_block == 0, (D, d_block)
+    nd = D // d_block
+    return pl.pallas_call(
+        functools.partial(_tick_deliver_kernel, B=B),
+        grid=(nd,),
+        in_specs=[
+            pl.BlockSpec((C, d_block), lambda d: (0, d)),
+            pl.BlockSpec((C, d_block), lambda d: (0, d)),
+            pl.BlockSpec((B, d_block), lambda d: (0, d)),
+            pl.BlockSpec((C,), lambda d: (0,)),
+            pl.BlockSpec((C,), lambda d: (0,)),
+            pl.BlockSpec((C,), lambda d: (0,)),
+        ],
+        out_specs=pl.BlockSpec((C, d_block), lambda d: (0, d)),
+        out_shape=jax.ShapeDtypeStruct((C, D), jnp.float32),
+        interpret=interpret,
+    )(w, U, bc_v, best, take, eta)
+
+
+def tick_scatter_kernel(sent, w, U, upd, wgt, any_g, done, eta, *,
+                        dp_on: bool, d_block: int = 512,
+                        interpret: bool = True):
+    """sent, w, U: (C, D); upd: (G, D); wgt: (G, C); any_g: (G,) int32;
+    done: (C,) int32; eta: (C,).  C % 8 == 0, D % d_block == 0.
+
+    Returns (w_new (C, D), U_new (C, D), upd_new (G, D)).
+    """
+    C, D = sent.shape
+    G = upd.shape[0]
+    assert D % d_block == 0, (D, d_block)
+    nd = D // d_block
+    return pl.pallas_call(
+        functools.partial(_tick_scatter_kernel, G=G, dp_on=dp_on),
+        grid=(nd,),
+        in_specs=[
+            pl.BlockSpec((C, d_block), lambda d: (0, d)),
+            pl.BlockSpec((C, d_block), lambda d: (0, d)),
+            pl.BlockSpec((C, d_block), lambda d: (0, d)),
+            pl.BlockSpec((G, d_block), lambda d: (0, d)),
+            pl.BlockSpec((G, C), lambda d: (0, 0)),
+            pl.BlockSpec((G,), lambda d: (0,)),
+            pl.BlockSpec((C,), lambda d: (0,)),
+            pl.BlockSpec((C,), lambda d: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((C, d_block), lambda d: (0, d)),
+            pl.BlockSpec((C, d_block), lambda d: (0, d)),
+            pl.BlockSpec((G, d_block), lambda d: (0, d)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C, D), jnp.float32),
+            jax.ShapeDtypeStruct((C, D), jnp.float32),
+            jax.ShapeDtypeStruct((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(sent, w, U, upd, wgt, any_g, done, eta)

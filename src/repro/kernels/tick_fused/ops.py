@@ -1,0 +1,138 @@
+"""Jitted dispatch wrappers for the fused tick kernels, with padding.
+
+Backend-aware dispatch: ``use_kernel=None`` (the engine default) means
+"kernel on TPU/GPU, pure-jnp reference on CPU", and ``interpret=None``
+means "infer interpret mode from ``jax.default_backend()``".  On CPU
+the reference path therefore traces the exact expressions the device
+engine historically inlined — the golden fixtures and host-vs-device
+parity stay byte-identical by construction — while an accelerator
+backend runs the fused kernels unpadded-equivalently.
+
+Kernel-path padding: C to the f32 sublane multiple (8), D to the lane
+block.  Padded clients carry weight/mask/take 0 and padded model lanes
+are zero, so they are sliced off unchanged.  (Known accepted hazard:
+zero-padded client rows append ``+0.0`` terms to the scatter sums,
+which could flip an exactly ``-0.0`` total; the CPU parity path is
+unpadded and numpy comparisons treat the two zeros as equal.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tick_fused.kernel import (bucket_apply_kernel,
+                                             tick_deliver_kernel,
+                                             tick_scatter_kernel)
+from repro.kernels.tick_fused.ref import (bucket_apply_ref,
+                                          tick_deliver_ref,
+                                          tick_scatter_ref)
+
+
+def _resolve(use_kernel, interpret):
+    if use_kernel is None:
+        use_kernel = jax.default_backend() != "cpu"
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return use_kernel, interpret
+
+
+def _shrink(d_block: int, D: int) -> int:
+    # interpret path has no 128-lane constraint: shrink the tile to the
+    # model dim's power-of-two (min 8) so a small D is not padded
+    # many-fold
+    return min(d_block, max(8, 1 << (D - 1).bit_length()))
+
+
+@functools.partial(jax.jit, static_argnames=("d_block", "use_kernel",
+                                             "interpret"))
+def bucket_apply(v, rows, dec, flag, *, d_block: int = 512,
+                 use_kernel=None, interpret=None):
+    """v: (D,), rows: (A, D), dec: (A,), flag: scalar bool -> (D,)."""
+    use_kernel, interpret = _resolve(use_kernel, interpret)
+    if not use_kernel:
+        return bucket_apply_ref(v, rows, dec, flag)
+    D = v.shape[0]
+    if interpret:
+        d_block = _shrink(d_block, D)
+    v = v.astype(jnp.float32)
+    rows = rows.astype(jnp.float32)
+    pad_d = (-D) % d_block
+    if pad_d:
+        v = jnp.pad(v, (0, pad_d))
+        rows = jnp.pad(rows, ((0, 0), (0, pad_d)))
+    flag_i = jnp.asarray(flag, jnp.int32).reshape((1,))
+    out = bucket_apply_kernel(v, rows, dec.astype(jnp.float32), flag_i,
+                              d_block=d_block, interpret=interpret)
+    return out[:D]
+
+
+@functools.partial(jax.jit, static_argnames=("d_block", "use_kernel",
+                                             "interpret"))
+def tick_deliver(w, U, bc_v, best, take, eta, *, d_block: int = 512,
+                 use_kernel=None, interpret=None):
+    """w, U: (C, D); bc_v: (B, D); best: (C,) int; take: (C,) bool;
+    eta: (C,) -> updated weights (C, D)."""
+    use_kernel, interpret = _resolve(use_kernel, interpret)
+    if not use_kernel:
+        return tick_deliver_ref(w, U, bc_v, best, take, eta)
+    C, D = w.shape
+    if interpret:
+        d_block = _shrink(d_block, D)
+    w = w.astype(jnp.float32)
+    U = U.astype(jnp.float32)
+    bc_v = bc_v.astype(jnp.float32)
+    best_i = best.astype(jnp.int32)
+    take_i = take.astype(jnp.int32)
+    eta = eta.astype(jnp.float32)
+    pad_c = (-C) % 8
+    pad_d = (-D) % d_block
+    if pad_c or pad_d:
+        w = jnp.pad(w, ((0, pad_c), (0, pad_d)))
+        U = jnp.pad(U, ((0, pad_c), (0, pad_d)))
+        bc_v = jnp.pad(bc_v, ((0, 0), (0, pad_d)))
+        best_i = jnp.pad(best_i, (0, pad_c))
+        take_i = jnp.pad(take_i, (0, pad_c))
+        eta = jnp.pad(eta, (0, pad_c))
+    out = tick_deliver_kernel(w, U, bc_v, best_i, take_i, eta,
+                              d_block=d_block, interpret=interpret)
+    return out[:C, :D]
+
+
+@functools.partial(jax.jit, static_argnames=("dp_on", "d_block",
+                                             "use_kernel", "interpret"))
+def tick_scatter(sent, w, U, upd, wgt, any_g, done, eta, *, dp_on: bool,
+                 d_block: int = 512, use_kernel=None, interpret=None):
+    """sent, w, U: (C, D); upd: (G, D); wgt: (G, C); any_g: (G,) bool;
+    done: (C,) bool; eta: (C,)
+    -> (w_new (C, D), U_new (C, D), upd_new (G, D))."""
+    use_kernel, interpret = _resolve(use_kernel, interpret)
+    if not use_kernel:
+        return tick_scatter_ref(sent, w, U, upd, wgt, any_g, done, eta,
+                                dp_on=dp_on)
+    C, D = sent.shape
+    if interpret:
+        d_block = _shrink(d_block, D)
+    sent = sent.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    U = U.astype(jnp.float32)
+    upd = upd.astype(jnp.float32)
+    wgt = wgt.astype(jnp.float32)
+    any_i = any_g.astype(jnp.int32)
+    done_i = done.astype(jnp.int32)
+    eta = eta.astype(jnp.float32)
+    pad_c = (-C) % 8
+    pad_d = (-D) % d_block
+    if pad_c or pad_d:
+        sent = jnp.pad(sent, ((0, pad_c), (0, pad_d)))
+        w = jnp.pad(w, ((0, pad_c), (0, pad_d)))
+        U = jnp.pad(U, ((0, pad_c), (0, pad_d)))
+        upd = jnp.pad(upd, ((0, 0), (0, pad_d)))
+        wgt = jnp.pad(wgt, ((0, 0), (0, pad_c)))
+        done_i = jnp.pad(done_i, (0, pad_c))
+        eta = jnp.pad(eta, (0, pad_c))
+    w_new, u_new, upd_new = tick_scatter_kernel(
+        sent, w, U, upd, wgt, any_i, done_i, eta, dp_on=dp_on,
+        d_block=d_block, interpret=interpret)
+    return w_new[:C, :D], u_new[:C, :D], upd_new[:, :D]

@@ -1,0 +1,83 @@
+"""Pure-jnp references for the fused tick kernels.
+
+Every expression here mirrors, token for token, the float arithmetic
+the device engine historically inlined in its tick body — same ops,
+same reduction order, same ``jnp.where`` guards.  The parity contract
+(host engine vs device engine bitwise on the operand-noise path) rests
+on these references being the CPU dispatch target, so DO NOT "clean
+up" the arithmetic: a reassociated sum or an unguarded add on an empty
+bucket (``-0.0`` hazard) breaks byte-identical golden fixtures.
+"""
+import jax.numpy as jnp
+
+
+def bucket_apply_ref(v, rows, dec, flag):
+    """Apply decayed bucket rows to the server vector.
+
+    v      [D]    server model vector
+    rows   [A, D] contribution rows (arrival bucket / flush buffer /
+                  per-stratum kvec rows)
+    dec    [A]    per-row decay weights (ones for the paper strategy)
+    flag   []     bool: whether anything arrived / flushed this tick
+
+    A == 1 is the paper / FedBuff shape: the contribution is the single
+    row scaled by its weight.  ``rows[0] * dec[0]`` (with dec == 1.0 a
+    bitwise identity) matches the engines' historical ``v - arr_due``;
+    a ``jnp.sum`` over the size-1 axis would compute ``0.0 + x`` and
+    flip a ``-0.0`` row.  A > 1 is the stratified shape and matches
+    ``_make_strat_apply`` / the device tick verbatim.
+    """
+    if rows.shape[0] == 1:
+        contrib = rows[0] * dec[0]
+    else:
+        contrib = jnp.sum(rows * dec[:, None], axis=0)
+    return jnp.where(flag, v - contrib, v)
+
+
+def tick_deliver_ref(w, U, bc_v, best, take, eta):
+    """Deliver the freshest eligible broadcast to taking clients.
+
+    w     [C, D] client weights
+    U     [C, D] client round updates
+    bc_v  [B, D] broadcast ring vectors
+    best  [C]    int32 ring index of the freshest eligible broadcast
+    take  [C]    bool per-client take mask
+    eta   [C]    per-client round stepsize
+
+    Matches the device tick's ``bc_v[best] - eta[:, None] * st.U``
+    receive expression (and the host engine's ``_isr_receive``).
+    """
+    return jnp.where(take[:, None], bc_v[best] - eta[:, None] * U, w)
+
+
+def tick_scatter_ref(sent, w, U, upd, wgt, any_g, done, eta, *, dp_on):
+    """Scatter finished rounds into the update ring; settle w and U.
+
+    sent  [C, D] per-client sent update (DP-noised when dp_on)
+    w     [C, D] client weights
+    U     [C, D] raw (pre-noise) client round updates
+    upd   [G, D] update-ring rows (flattened [L*R, D] when stratified)
+    wgt   [G, C] per-row scatter weights: ``eta * in_g`` per client
+    any_g [G]    bool/int: whether row g receives any client this tick
+    done  [C]    bool finished-round mask
+    eta   [C]    per-client round stepsize
+    dp_on        static: DP w-consistency update enabled
+
+    Per ring row: the full-client-axis weighted sum in the engines'
+    historical reduction order, added under the ``jnp.any`` guard that
+    keeps untouched rows byte-identical (no ``-0.0`` flips from adding
+    a zero vector).  The U reset (historically the last statement of
+    ``do_complete``) folds in here: the far tier reads ``sent``, not U.
+    """
+    out = upd
+    for g in range(upd.shape[0]):
+        vec = jnp.sum(sent * wgt[g][:, None], axis=0)
+        out = out.at[g].set(jnp.where(any_g[g] != 0, out[g] + vec,
+                                      out[g]))
+    if dp_on:
+        w_new = jnp.where(done[:, None],
+                          w + eta[:, None] * (sent - U), w)
+    else:
+        w_new = w
+    U_new = jnp.where(done[:, None], 0.0, sent)
+    return w_new, U_new, out

@@ -27,7 +27,6 @@ Bonawitz et al. (1902.01046) report for real device populations.
 """
 from __future__ import annotations
 
-import bisect
 from dataclasses import dataclass
 from typing import Callable, Optional
 
@@ -260,45 +259,126 @@ class RegionalChurn:
             "integrates")
 
 
+def _renewal_epoch_draw(base, e, C: int, N: int, duty, on_rate: float,
+                        off_rate: float):
+    """Per-(client, epoch) renewal schedule: stationary-Bernoulli(duty)
+    initial states ``init_on [C]`` and f32 cumulative switch times
+    ``cs [C, N]`` (seconds from the epoch start) from N exponential
+    holdings on the ``fold_in(fold_in(base, epoch), client)`` chain.
+
+    THE shared expression of the renewal chain: ``RenewalChurn.tick_plan``
+    evaluates it traced inside the engines' jitted ticks and
+    ``_RenewalWindows`` evaluates it per epoch on the host — identical
+    f32 operands from the identical threefry addresses are what make the
+    event simulator's trajectories PATH-WISE aligned with the cohort
+    tick masks, not merely statistically equivalent.
+    """
+    cidx = jnp.arange(C)
+    # holding j's exit rate depends on the state it is held in
+    j_odd = (jnp.arange(N) % 2 == 1)
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        jax.random.fold_in(base, e), cidx)
+    u = jax.vmap(lambda k: jax.random.uniform(k, (N + 1,)))(keys)
+    init_on = u[:, 0] < duty                      # stationary
+    state_on = init_on[:, None] ^ j_odd[None, :]  # [C, N]
+    rate = jnp.where(state_on, jnp.float32(off_rate),
+                     jnp.float32(on_rate))
+    dur = -jnp.log1p(-u[:, 1:]) / rate
+    return init_on, jnp.cumsum(dur, axis=1)
+
+
 class _RenewalWindows:
     """Continuous-time alternating-renewal on/off windows for the event
-    simulator: per-client exponential holding times (rate ``off_rate``
-    while on, ``on_rate`` while off), initial state stationary
-    Bernoulli(duty), switch times generated lazily per client."""
+    simulator, path-wise aligned with the cohort tick mask: time splits
+    into epochs of ``E_s = epoch_cycles * mean_cycle_s`` seconds, and
+    each epoch's per-client initial state and switch times come from the
+    SAME ``_renewal_epoch_draw`` fold_in chain the tick mask consumes.
+    Whenever the engine tick ``dt`` divides ``E_s`` exactly, tick t of
+    the cohort engines and second ``t * dt`` of the event simulator land
+    in the same epoch at the same offset, so ``on_at`` reproduces the
+    tick mask elementwise (the exact-schedule test pins it).
 
-    def __init__(self, C: int, on_rate: float, off_rate: float,
-                 seed: int):
-        self.on_rate = float(on_rate)
-        self.off_rate = float(off_rate)
-        duty = on_rate / (on_rate + off_rate)
-        self._rngs = [np.random.default_rng(
-            ((seed ^ RENEW_SALT) * 1_000_003 + c) & 0xFFFFFFFF)
-            for c in range(C)]
-        self._init_on = [bool(r.random() < duty) for r in self._rngs]
-        self._switch = [[0.0] for _ in range(C)]    # cumulative times
-        self._cum_on = [[0.0] for _ in range(C)]    # on-secs at switch j
+    Beyond the N-th switch of an epoch the state clamps to the post-N
+    parity until the epoch ends — the same clamp the tick mask's
+    ``ndone`` sum applies (the ``n_draws >= 4 * epoch_cycles`` validation
+    makes this a rare tail event)."""
 
-    def _state(self, c: int, j: int) -> bool:
-        """State during segment j (between switches j and j+1)."""
-        return self._init_on[c] ^ (j % 2 == 1)
+    def __init__(self, av: "RenewalChurn", C: int, seed: int):
+        self.C = int(C)
+        self.N = int(av.n_draws)
+        self.E_s = float(av.epoch_cycles * av.mean_cycle_s)
+        self._base = jax.random.PRNGKey(seed ^ RENEW_SALT)
+        self._duty = jnp.float32(av.duty)
+        self._on_rate = float(av.on_rate)
+        self._off_rate = float(av.off_rate)
+        self._epochs = {}                       # e -> (init_on, cs)
+        self._pref = [[0.0] for _ in range(C)]  # on-secs over epochs [0, i)
 
-    def _extend(self, c: int, t: float) -> None:
-        sw, co = self._switch[c], self._cum_on[c]
-        while sw[-1] <= t:
-            j = len(sw) - 1
-            on = self._state(c, j)
-            rate = self.off_rate if on else self.on_rate
-            dur = self._rngs[c].exponential(1.0 / rate)
-            sw.append(sw[-1] + dur)
-            co.append(co[-1] + (dur if on else 0.0))
+    def _epoch(self, e: int):
+        ent = self._epochs.get(e)
+        if ent is None:
+            init_on, cs = _renewal_epoch_draw(
+                self._base, e, self.C, self.N, self._duty,
+                self._on_rate, self._off_rate)
+            ent = (np.asarray(init_on), np.asarray(cs))
+            self._epochs[e] = ent
+        return ent
+
+    def on_at(self, c: int, t: float) -> bool:
+        """State of client c at second t — the tick mask's expression
+        verbatim (f32 ``cs <= tau`` switch counting)."""
+        e = int(t // self.E_s)
+        init_on, cs = self._epoch(e)
+        tau = np.float32(t - e * self.E_s)
+        ndone = int(np.sum(cs[c] <= tau))
+        return bool(init_on[c]) ^ (ndone % 2 == 1)
+
+    def _walk(self, c: int, e: int, tau: float,
+              need: Optional[float] = None) -> float:
+        """Segment walk inside epoch e.  With ``need=None``: on-seconds
+        of client c over epoch offsets [0, tau].  With ``need``: the
+        smallest offset at which that many on-seconds have accrued
+        (requires the epoch to hold them — callers check totals)."""
+        init_on, cs = self._epoch(e)
+        sw = cs[c].astype(np.float64)
+        on, acc, prev = bool(init_on[c]), 0.0, 0.0
+        for j in range(self.N):
+            hi = min(float(sw[j]), tau)
+            if hi > prev:
+                if on:
+                    if need is not None and acc + (hi - prev) >= need:
+                        return prev + (need - acc)
+                    acc += hi - prev
+                prev = hi
+            if sw[j] >= tau:
+                break
+            on = not on
+        else:
+            # post-N clamp segment up to the epoch-offset horizon
+            if tau > prev and on:
+                if need is not None and acc + (tau - prev) >= need:
+                    return prev + (need - acc)
+                acc += tau - prev
+        if need is not None:
+            raise ValueError(
+                f"epoch {e} holds only {acc} on-seconds for client {c}, "
+                f"need {need}")
+        return acc
+
+    def _prefix(self, c: int, e: int) -> float:
+        """Cumulative on-seconds of client c over the e full epochs
+        [0, e * E_s] (memoized per client)."""
+        pl = self._pref[c]
+        while len(pl) <= e:
+            pl.append(pl[-1] + self._walk(c, len(pl) - 1, self.E_s))
+        return pl[e]
 
     def _cum(self, c: int, t: float) -> float:
         """Cumulative on-seconds of client c over [0, t]."""
-        self._extend(c, t)
-        sw = self._switch[c]
-        j = bisect.bisect_right(sw, t) - 1
-        on = self._state(c, j)
-        return self._cum_on[c][j] + (t - sw[j] if on else 0.0)
+        if t <= 0.0:
+            return 0.0
+        e = int(t // self.E_s)
+        return self._prefix(c, e) + self._walk(c, e, t - e * self.E_s)
 
     def on_time(self, c: int, t0: float, t1: float) -> float:
         return max(0.0, self._cum(c, t1) - self._cum(c, t0))
@@ -308,15 +388,11 @@ class _RenewalWindows:
         if work_s <= 0.0:
             return t0
         target = self._cum(c, t0) + work_s
-        while True:
-            co, sw = self._cum_on[c], self._switch[c]
-            j = bisect.bisect_right(co, target) - 1
-            if j < len(sw) - 1:
-                # target is reached inside segment j (which must be on:
-                # cum_on grows only there)
-                return sw[j] + (target - co[j])
-            self._extend(c, sw[-1] + 1.0 / min(self.on_rate,
-                                               self.off_rate))
+        e = max(int(t0 // self.E_s), 0)
+        while self._prefix(c, e + 1) < target:
+            e += 1
+        need = target - self._prefix(c, e)
+        return e * self.E_s + self._walk(c, e, self.E_s, need=need)
 
 
 @dataclass(frozen=True)
@@ -327,18 +403,20 @@ class RenewalChurn:
     ``on_rate / (on_rate + off_rate)``.
 
     Unlike ``Churn`` this HAS a continuous-time form, so the event
-    simulator integrates it exactly (``_RenewalWindows``: lazy per-client
-    switch times in its advance/on-time schedule).  The cohort engines
-    approximate it per tick from the addressed threefry chain: virtual
-    time splits into epochs of ``epoch_cycles`` mean on/off cycles, and
-    within an epoch the mask is an exact renewal process whose initial
-    state and holding times are pure functions of (client, epoch) —
-    ``fold_in(PRNGKey(seed ^ RENEW_SALT), epoch)`` then per-client
-    fold_in — regenerated at epoch boundaries from the stationary law.
-    Host-cohort vs device therefore stays BIT-IDENTICAL, while
-    event-vs-cohort is a *statistical* equivalence contract (same
-    stationary duty and holding-time law, not the same sample paths) —
-    the chi-square tests pin it.
+    simulator integrates it exactly.  Virtual time splits into epochs of
+    ``epoch_cycles`` mean on/off cycles, and within an epoch the process
+    is an exact renewal schedule whose initial state and holding times
+    are pure functions of (client, epoch) — ``fold_in(PRNGKey(seed ^
+    RENEW_SALT), epoch)`` then per-client fold_in
+    (``_renewal_epoch_draw``) — regenerated at epoch boundaries from the
+    stationary law.  BOTH forms consume that one chain: the cohort
+    engines' tick mask evaluates it traced, the event simulator's
+    ``_RenewalWindows`` integrates the same switch times on the host.
+    Host-cohort vs device therefore stays BIT-IDENTICAL, and
+    event-vs-cohort is a *path-wise* contract — whenever the tick ``dt``
+    divides the epoch length exactly, the tick mask equals the windows
+    state at every tick (the exact-schedule test pins it), with the duty
+    chi-square as the distributional backstop.
     """
     on_rate: float = 1.0 / 16.0     # per virtual second: 1 / mean_off_s
     off_rate: float = 1.0 / 48.0    # per virtual second: 1 / mean_on_s
@@ -371,30 +449,22 @@ class RenewalChurn:
         epoch_t = max(1, int(round(self.epoch_cycles * self.mean_cycle_s
                                    / dt)))
         base = jax.random.PRNGKey(seed ^ RENEW_SALT)
-        cidx = jnp.arange(C)
         N = int(self.n_draws)
         duty = jnp.float32(self.duty)
-        # holding j's exit rate depends on the state it is held in
-        j_odd = (jnp.arange(N) % 2 == 1)
+        on_rate, off_rate = self.on_rate, self.off_rate
 
         def mask(t):
             e = t // epoch_t
             tau = (t - e * epoch_t).astype(jnp.float32) * jnp.float32(dt)
-            keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
-                jax.random.fold_in(base, e), cidx)
-            u = jax.vmap(lambda k: jax.random.uniform(k, (N + 1,)))(keys)
-            init_on = u[:, 0] < duty                      # stationary
-            state_on = init_on[:, None] ^ j_odd[None, :]  # [C, N]
-            rate = jnp.where(state_on, jnp.float32(self.off_rate),
-                             jnp.float32(self.on_rate))
-            dur = -jnp.log1p(-u[:, 1:]) / rate
-            ndone = jnp.sum(jnp.cumsum(dur, axis=1) <= tau, axis=1)
+            init_on, cs = _renewal_epoch_draw(base, e, C, N, duty,
+                                              on_rate, off_rate)
+            ndone = jnp.sum(cs <= tau, axis=1)
             return init_on ^ (ndone % 2 == 1)
 
         return mask
 
     def windows(self, C: int, seed: int) -> _RenewalWindows:
-        return _RenewalWindows(C, self.on_rate, self.off_rate, seed)
+        return _RenewalWindows(self, C, seed)
 
 
 # ---------------------------------------------------------------------------

@@ -57,6 +57,29 @@ def next_pow2(n: int) -> int:
     return p
 
 
+def draw_table_ids(C: int, T: int, weights, seed):
+    """[C] int32 table ids for ``TableAssignment("draw")``, derived
+    entirely on the threefry chain: one uniform per client from
+    ``fold_in(PRNGKey(seed ^ TABLE_SALT), c)`` inverted through the
+    normalized-weight CDF.
+
+    Jit-compatible with static ``(C, T, weights)`` and a traced seed —
+    the multi-host prerequisite: every host re-derives the SAME ids
+    in-jit from the seed instead of shipping a host-numpy array drawn
+    on one process.  ``weights=None`` means uniform over the T tables.
+    """
+    base = jax.random.PRNGKey(seed ^ TABLE_SALT)
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        base, jnp.arange(C))
+    u = jax.vmap(lambda k: jax.random.uniform(k, ()))(keys)
+    w = (jnp.asarray(weights, jnp.float32) if weights is not None
+         else jnp.ones(T, jnp.float32))
+    cum = jnp.cumsum(w / jnp.sum(w))
+    # inverse CDF over the first T-1 thresholds: u >= cum[j] pushes the
+    # id past bin j, and u < 1 <= cum[-1]-ish keeps ids in [0, T)
+    return jnp.sum(u[:, None] >= cum[None, :-1], axis=1).astype(jnp.int32)
+
+
 @dataclass(frozen=True)
 class TableAssignment:
     """[C]-indexed mapping of clients onto a scenario's latency tables.
@@ -65,7 +88,9 @@ class TableAssignment:
       cycle:    client c uses table c % T (the per-device trace default)
       explicit: ``table_id`` is the full [C] tuple of table indices
       draw:     each client draws its table from ``weights`` (uniform
-                when omitted), deterministically from the engine seed
+                when omitted) on the ``TABLE_SALT`` threefry chain —
+                a pure, jit-rederivable function of the engine seed
+                (``draw_table_ids``)
     """
     kind: str = "cycle"
     table_id: Optional[Tuple[int, ...]] = None
@@ -106,10 +131,8 @@ class TableAssignment:
                 raise ValueError(
                     f"need one weight per table: {len(self.weights)} "
                     f"weights for {T} tables")
-            w = (np.asarray(self.weights, np.float64)
-                 if self.weights is not None else np.ones(T))
-            rng = np.random.default_rng(seed ^ TABLE_SALT)
-            return rng.choice(T, size=C, p=w / w.sum()).astype(np.int32)
+            return np.asarray(draw_table_ids(C, T, self.weights, seed),
+                              np.int32)
         return (np.arange(C) % T).astype(np.int32)
 
 

@@ -160,6 +160,9 @@ def cohort_pspecs(mesh: Mesh, n_clients: int) -> Dict[str, P]:
         # op-census vector (repro.telemetry.costs): scalar-ish counter
         # block, replicates like the other telemetry scalars
         "ops": P(None),
+        # fused-loop iteration census ([loop_iters, block_iters]):
+        # scalar-ish, replicates like ops
+        "iters": P(None),
     }
 
 

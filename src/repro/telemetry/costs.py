@@ -115,14 +115,24 @@ def ops_vector(ops: Optional[Mapping[str, int]]) -> np.ndarray:
 
 def cost_decomposition(ops: Mapping[str, int], *,
                        steady_s: Optional[float] = None,
-                       ticks: Optional[int] = None
+                       ticks: Optional[int] = None,
+                       loop_iters: Optional[int] = None,
+                       block_iters: Optional[int] = None
                        ) -> Dict[str, float]:
     """Per-op share of a steady-state run, for BENCH_cohort.json.
 
     With ``steady_s`` given, adds ``s_per_tick`` (amortized wall seconds
     per protocol tick) so entries can be compared across workloads; the
-    ``tick_overhead_ratio`` is the roofline item's number — the fraction
-    of ticks that did protocol-only work (no client compute block ran).
+    ``tick_overhead_ratio`` is the roofline item's number.  Without the
+    iteration census it is the fraction of ticks that did protocol-only
+    work (no client compute block ran).  When the device engine's tick
+    coalescing is on, overhead ticks ride along inside compute
+    iterations, so what the roofline actually pays is while_loop
+    ITERATIONS — pass ``loop_iters`` / ``block_iters``
+    (``DeviceCohortEngine.fused_iters``) and the ratio becomes the
+    fraction of loop iterations that ran without a compute block,
+    alongside ``ticks_per_iter`` (how many protocol ticks one iteration
+    amortizes, in [1, 2]).
     """
     t = int(ticks if ticks is not None else ops.get("ticks", 0))
     out: Dict[str, float] = {}
@@ -132,6 +142,11 @@ def cost_decomposition(ops: Mapping[str, int], *,
         out["tick_overhead_ratio"] = 1.0 - ops.get("block_ticks", 0) / t
         if steady_s is not None:
             out["s_per_tick"] = float(steady_s) / t
+        if loop_iters is not None and int(loop_iters) > 0:
+            li = int(loop_iters)
+            out["loop_iters"] = float(li)
+            out["ticks_per_iter"] = t / li
+            out["tick_overhead_ratio"] = 1.0 - int(block_iters or 0) / li
     return out
 
 
@@ -140,7 +155,9 @@ def check_ops(ops: Mapping[str, int], *,
               broadcasts: Optional[int] = None,
               far_messages: Optional[int] = None,
               clients: Optional[int] = None,
-              ticks: Optional[int] = None) -> List[str]:
+              ticks: Optional[int] = None,
+              loop_iters: Optional[int] = None,
+              block_iters: Optional[int] = None) -> List[str]:
     """Internal-consistency relations of one op-census dict.
 
     Returns human-readable problem strings; the trace checker wraps
@@ -202,4 +219,17 @@ def check_ops(ops: Mapping[str, int], *,
         problems.append(
             f"deliver_ticks={get('deliver_ticks')} exceeds "
             f"deliver_rows={get('deliver_rows')}")
+    if loop_iters is not None:
+        li, bi = int(loop_iters), int(block_iters or 0)
+        # tick coalescing merges at most two ticks per iteration, and
+        # an iteration holds at most one block tick
+        if not bi <= li <= t <= 2 * li:
+            problems.append(
+                f"iteration census violates block_iters <= loop_iters "
+                f"<= ticks <= 2 * loop_iters: ({bi}, {li}, {t})")
+        if get("block_ticks") < bi:
+            problems.append(
+                f"block_iters={bi} exceeds block_ticks="
+                f"{get('block_ticks')} (an iteration's block came from "
+                f">= 1 block tick)")
     return problems

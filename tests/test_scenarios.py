@@ -233,6 +233,24 @@ def test_table_assignment_kinds_and_validation():
         TableAssignment("explicit")
 
 
+def test_table_assignment_draw_is_threefry_addressed_and_pinned():
+    """kind='draw' ids come from the TABLE_SALT threefry chain — the
+    jitted derivation equals resolve() (the multi-host prerequisite:
+    every host re-derives the ids in-jit from the seed), and the exact
+    ids are pinned so the chain never drifts silently."""
+    from repro.scenarios.registry import draw_table_ids
+    ids = TableAssignment("draw", weights=(0.6, 0.4)).resolve(8, 2,
+                                                              seed=3)
+    jit_ids = jax.jit(draw_table_ids,
+                      static_argnames=("C", "T", "weights"))(
+        8, 2, (0.6, 0.4), jnp.int32(3))
+    np.testing.assert_array_equal(ids, np.asarray(jit_ids))
+    np.testing.assert_array_equal(ids, [0, 0, 0, 0, 1, 1, 0, 0])
+    uni = TableAssignment("draw").resolve(12, 3, seed=0)
+    np.testing.assert_array_equal(uni, [1, 1, 2, 1, 2, 0, 0, 2, 2, 2,
+                                        1, 0])
+
+
 def test_error_paths_tables_and_legacy_specs(tmp_path):
     from repro.scenarios import legacy_latency_scenario
     with pytest.raises(ValueError, match="0 < lo <= hi"):
@@ -353,17 +371,26 @@ def test_regional_churn_duty_correlation_and_validation():
         RegionalChurn(p_available=0.9, p_region_up=0.5)
 
 
-def test_renewal_churn_duty_chi_square_and_validation():
-    """The cohort engines' per-tick renewal approximation hits the
-    analytic stationary duty on_rate / (on_rate + off_rate), pinned by
-    a chi-square test over epoch-independent samples; the event
-    simulator's continuous windows integrate to the same duty
-    (the statistical-equivalence contract)."""
+def test_renewal_churn_exact_schedule_duty_and_validation():
+    """Path-wise contract: the cohort tick mask and the event sim's
+    renewal windows consume the SAME per-(client, epoch) holding times
+    from the fold_in chain, so when dt divides the epoch length exactly
+    the mask equals the windows state at EVERY tick — an exact-schedule
+    assertion, not just the duty chi-square (kept as backstop)."""
     av = RenewalChurn(on_rate=1.0 / 4.0, off_rate=1.0 / 12.0)
     duty = av.duty
     assert abs(duty - 0.75) < 1e-12
+    # mean_cycle = 4 + 12 = 16 s, epoch_cycles = 4 -> E_s = 64 s; dt = 1
+    # divides it exactly, so tick t and second t share (epoch, offset)
+    assert av.epoch_cycles * av.mean_cycle_s == 64.0
     C, E = 32, 64
     mask = av.tick_plan(C=C, dt=1.0, seed=0)
+    w = av.windows(C=C, seed=0)
+    # exact schedule across three epochs incl. both epoch boundaries
+    for t in range(0, 3 * 64 + 1, 3):
+        m = np.asarray(mask(jnp.int32(t)))
+        ws = np.array([w.on_at(c, float(t)) for c in range(C)])
+        np.testing.assert_array_equal(m, ws, err_msg=f"t={t}")
     epoch_t = max(1, round(av.epoch_cycles * av.mean_cycle_s / 1.0))
     # one sample per epoch and client: independent Bernoulli(duty)
     on = sum(int(np.asarray(mask(jnp.int32(e * epoch_t + 3))).sum())
@@ -374,12 +401,12 @@ def test_renewal_churn_duty_chi_square_and_validation():
             + ((n - on) - exp_off) ** 2 / exp_off)
     assert chi2 < _chi2_bound(1), (chi2, on / n)
     # event-side: continuous on-time fraction integrates to the duty
-    w = av.windows(C=8, seed=0)
     frac = np.mean([w.on_time(c, 0.0, 4000.0) / 4000.0 for c in range(8)])
     assert abs(frac - duty) < 0.05
-    # advance() inverts on_time() across switch boundaries
-    t1 = w.advance(0, 3.0, 25.0)
-    assert abs(w.on_time(0, 3.0, t1) - 25.0) < 1e-9
+    # advance() inverts on_time() across switch AND epoch boundaries
+    for (c, t0, work) in [(0, 3.0, 25.0), (1, 0.0, 70.0), (2, 60.0, 5.0)]:
+        t1 = w.advance(c, t0, work)
+        assert abs(w.on_time(c, t0, t1) - work) < 1e-9, (c, t0, work)
     with pytest.raises(ValueError, match="on_rate"):
         RenewalChurn(on_rate=0.0)
     with pytest.raises(ValueError, match="epoch_cycles"):

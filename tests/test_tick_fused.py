@@ -1,0 +1,191 @@
+"""Fused device-tick kernels (repro.kernels.tick_fused): ref-vs-kernel
+fire tests on the CPU interpreter (padded and unpadded C / D), the
+empty-bucket ``-0.0`` guarded-add hazard, the ``dp_rng`` knob, the
+in-kernel-PRNG DP distribution (TPU only), and tick coalescing
+(``fuse_ticks``) staying bitwise with the unfused loop."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cohort import DeviceCohortSimulator
+from repro.core import LogRegTask
+from repro.data import make_binary_dataset
+from repro.kernels.tick_fused import (bucket_apply, tick_deliver,
+                                      tick_scatter)
+
+
+def _task(n=300, d=12, seed=9, sample_seed=21, **kw):
+    X, y = make_binary_dataset(n, d, seed=seed, noise=0.3)
+    return LogRegTask(X, y, l2=1.0 / n, sample_seed=sample_seed, **kw)
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+# --- ref vs interpret-kernel fire tests -------------------------------------
+
+@pytest.mark.parametrize("A", [1, 4])
+@pytest.mark.parametrize("D", [8, 10])          # exact vs padded lanes
+@pytest.mark.parametrize("flag", [False, True])
+def test_bucket_apply_kernel_matches_ref(A, D, flag):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    v, rows = _rand(ks[0], D), _rand(ks[1], A, D)
+    dec = jax.random.uniform(ks[2], (A,), jnp.float32)
+    ref = bucket_apply(v, rows, dec, flag, use_kernel=False)
+    ker = bucket_apply(v, rows, dec, flag, use_kernel=True,
+                       interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(ker))
+
+
+@pytest.mark.parametrize("C", [5, 8])           # padded vs exact clients
+@pytest.mark.parametrize("D", [8, 10])
+def test_tick_deliver_kernel_matches_ref(C, D):
+    B = 4
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    w, U, bc_v = _rand(ks[0], C, D), _rand(ks[1], C, D), _rand(ks[2], B, D)
+    best = jax.random.randint(ks[3], (C,), 0, B)
+    take = jnp.asarray([True, False, True, True, False][:C] + [True] * 0)
+    take = jnp.resize(take, (C,))
+    eta = jnp.linspace(0.05, 0.1, C, dtype=jnp.float32)
+    ref = tick_deliver(w, U, bc_v, best, take, eta, use_kernel=False)
+    ker = tick_deliver(w, U, bc_v, best, take, eta, use_kernel=True,
+                       interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(ker))
+
+
+@pytest.mark.parametrize("C", [5, 8])
+@pytest.mark.parametrize("D", [8, 10])
+@pytest.mark.parametrize("dp_on", [False, True])
+def test_tick_scatter_kernel_matches_ref(C, D, dp_on):
+    G = 3
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    sent, w, U = (_rand(k, C, D) for k in ks[:3])
+    upd = _rand(ks[3], G, D)
+    wgt = jax.random.uniform(ks[4], (G, C), jnp.float32)
+    # zero out one group's weights entirely (its guarded add must skip)
+    wgt = wgt.at[1].set(0.0)
+    any_g = jnp.asarray([True, False, True])
+    done = jnp.asarray(([True, False] * C)[:C])
+    eta = jnp.linspace(0.05, 0.1, C, dtype=jnp.float32)
+    ref = tick_scatter(sent, w, U, upd, wgt, any_g, done, eta,
+                       dp_on=dp_on, use_kernel=False)
+    ker = tick_scatter(sent, w, U, upd, wgt, any_g, done, eta,
+                       dp_on=dp_on, use_kernel=True, interpret=True)
+    for r, k in zip(ref, ker):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(k))
+
+
+def test_empty_bucket_negative_zero_preserved():
+    """Guarded adds: a flagged-off bucket apply and an empty scatter
+    group must pass ``-0.0`` through bit-for-bit (the hazard that makes
+    ``where(any(in_l), cur + vec, cur)`` mandatory — an unconditional
+    ``+ 0.0`` would flip the sign bit and break host-vs-device parity).
+    """
+    D = 8
+    neg = jnp.full((D,), -0.0, jnp.float32)
+    for path in (dict(use_kernel=False),
+                 dict(use_kernel=True, interpret=True)):
+        out = bucket_apply(neg, jnp.ones((2, D), jnp.float32),
+                           jnp.ones((2,), jnp.float32), False, **path)
+        assert np.signbit(np.asarray(out)).all(), path
+        w_new, u_new, upd_new = tick_scatter(
+            jnp.zeros((4, D), jnp.float32), neg[None, :] * jnp.ones((4, 1)),
+            jnp.zeros((4, D), jnp.float32), neg[None, :].repeat(2, axis=0),
+            jnp.zeros((2, 4), jnp.float32), jnp.asarray([False, False]),
+            jnp.zeros((4,), bool), jnp.full((4,), 0.1, jnp.float32),
+            dp_on=False, **path)
+        assert np.signbit(np.asarray(upd_new)).all(), path
+        assert np.signbit(np.asarray(w_new)).all(), path
+    # the A == 1 static branch: rows[0] * dec keeps -0.0 where a
+    # size-1 jnp.sum would have flipped it to +0.0
+    v = jnp.full((D,), -0.0, jnp.float32)
+    row = jnp.full((1, D), -0.0, jnp.float32)
+    ref = bucket_apply(v, row, jnp.ones((1,), jnp.float32), True,
+                       use_kernel=False)
+    ker = bucket_apply(v, row, jnp.ones((1,), jnp.float32), True,
+                       use_kernel=True, interpret=True)
+    np.testing.assert_array_equal(np.signbit(np.asarray(ref)),
+                                  np.signbit(np.asarray(ker)))
+
+
+# --- dp_rng knob ------------------------------------------------------------
+
+def test_dp_rng_knob_validation():
+    task = _task(dp_clip=0.1, dp_sigma=1.0)
+    kw = dict(n_clients=4, sizes_per_client=[2], round_stepsizes=[0.1],
+              d=1, seed=0, block=4)
+    with pytest.raises(ValueError, match="dp_rng"):
+        DeviceCohortSimulator(task, dp_rng="nope", **kw)
+    if jax.default_backend() != "tpu":
+        with pytest.raises(ValueError, match="TPU"):
+            DeviceCohortSimulator(task, dp_rng="in_kernel", **kw)
+    else:
+        with pytest.raises(ValueError, match="use_dp_kernel"):
+            DeviceCohortSimulator(task, dp_rng="in_kernel",
+                                  use_dp_kernel=False, **kw)
+
+
+def test_in_kernel_prng_noise_chi_square():
+    """dp_rng='in_kernel' draws standard normals inside the kernel —
+    distributionally equivalent to the operand path (chi-square over
+    normal-quantile bins), never bitwise.  TPU only by contract."""
+    if jax.default_backend() != "tpu":
+        pytest.skip("in-kernel PRNG path needs a TPU backend "
+                    "(pltpu.prng_random_bits has no CPU/GPU lowering)")
+    from repro.kernels.cohort_dp.ops import cohort_clip_noise
+    C, D = 64, 512
+    u = jnp.zeros((C, D), jnp.float32)
+    out, _ = cohort_clip_noise(
+        u, jax.random.PRNGKey(5), jnp.ones((C,), jnp.float32),
+        jnp.ones((C,), jnp.float32), clip=0.0, noise_scale=1.0,
+        use_kernel=True, in_kernel_rng=True)
+    s = np.asarray(out).ravel()
+    assert abs(s.mean()) < 0.02 and abs(s.std() - 1.0) < 0.02
+    edges = np.array([-2.0, -1.0, -0.5, 0.0, 0.5, 1.0, 2.0])
+    cdf = np.vectorize(
+        lambda x: 0.5 * (1.0 + math.erf(x / math.sqrt(2.0))))
+    probs = np.diff(np.concatenate([[0.0], cdf(edges), [1.0]]))
+    counts, _ = np.histogram(s, bins=np.concatenate(
+        [[-np.inf], edges, [np.inf]]))
+    expected = probs * s.size
+    chi2 = float(((counts - expected) ** 2 / expected).sum())
+    df = len(probs) - 1
+    assert chi2 < df + 5.0 * math.sqrt(2.0 * df), (chi2, counts)
+
+
+# --- tick coalescing --------------------------------------------------------
+
+def test_fuse_ticks_bitwise_and_iter_relations():
+    """fuse_ticks=True runs the SAME tick sequence as the unfused loop
+    (bitwise state, identical op census) in fewer while_loop iterations;
+    the ``iters`` census obeys block_iters <= loop_iters <= ticks <=
+    2 * loop_iters, with the unfused loop pinning one tick (and one
+    block tick) per iteration."""
+    task = _task()
+    kw = dict(n_clients=8, sizes_per_client=[1] * 8,
+              round_stepsizes=[0.1] * 8, d=1, seed=0, block=4)
+    sim_off = DeviceCohortSimulator(task, fuse_ticks=False, **kw)
+    res_off = sim_off.run(max_rounds=8, eval_every=8)
+    sim_on = DeviceCohortSimulator(task, fuse_ticks=True, **kw)
+    res_on = sim_on.run(max_rounds=8, eval_every=8)
+    np.testing.assert_array_equal(np.asarray(res_off["model"]["w"]),
+                                  np.asarray(res_on["model"]["w"]))
+    assert float(res_off["model"]["b"]) == float(res_on["model"]["b"])
+    tel_off, tel_on = res_off["telemetry"], res_on["telemetry"]
+    assert dict(tel_off.ops) == dict(tel_on.ops)
+    assert tel_off.ticks == tel_on.ticks
+    li_off, bi_off = sim_off.engine.fused_iters
+    li_on, bi_on = sim_on.engine.fused_iters
+    block_ticks = dict(tel_on.ops)["block_ticks"]
+    # unfused: one tick per iteration, block attribution is exact
+    assert li_off == tel_off.ticks and bi_off == block_ticks
+    # fused: every iteration runs 1-2 ticks and holds <= 1 block tick
+    assert bi_on <= li_on <= tel_on.ticks <= 2 * li_on
+    assert block_ticks >= bi_on
+    # coalescing actually fires on the FedSGD-shaped workload (half of
+    # its ticks are overhead-only, so they ride along)
+    assert li_on < li_off
